@@ -1,0 +1,84 @@
+"""Micro-benchmarks: Pallas kernels (interpret mode) vs pure-jnp oracle wall
+time on CPU, plus the real tiny-model serving step."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_kernels():
+    rows = []
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, T, H, KV, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, hd), jnp.float32)
+    t_pl = _time(lambda a, b, c: flash_attention(a, b, c, causal=True), q, k, v)
+    t_ref = _time(jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True)),
+                  q, k, v)
+    rows.append(("kernel/flash_attention/1k", t_pl * 1e6,
+                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret)"))
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    S = 4096
+    q1 = jax.random.normal(ks[0], (4, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (4, S, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (4, S, KV, hd), jnp.float32)
+    pos = jnp.asarray(S - 1, jnp.int32)
+    t_pl = _time(lambda a, b, c: decode_attention(a, b, c, pos), q1, kc, vc)
+    t_ref = _time(jax.jit(lambda a, b, c: decode_attention_ref(a, b, c, pos)),
+                  q1, kc, vc)
+    rows.append(("kernel/decode_attention/4k", t_pl * 1e6,
+                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret)"))
+
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_ref
+    B2, T2, Hh, P, N = 1, 512, 8, 64, 64
+    kk = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(kk[0], (B2, T2, Hh, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(kk[1], (B2, T2, Hh)))
+    A = -jnp.exp(jax.random.normal(kk[2], (Hh,)) * 0.5)
+    Bm = jax.random.normal(kk[3], (B2, T2, N)) * 0.5
+    Cm = jax.random.normal(kk[4], (B2, T2, N)) * 0.5
+    t_pl = _time(lambda *a: ssd_scan(*a, chunk=128), x, dt, A, Bm, Cm)
+    t_ref = _time(jax.jit(ssd_ref), x, dt, A, Bm, Cm)
+    rows.append(("kernel/ssd_scan/512", t_pl * 1e6,
+                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret)"))
+    return rows
+
+
+def bench_real_decode():
+    """Wall-clock decode step of a tiny real model on this host."""
+    from repro.configs.base import get_config
+    from repro.models import api
+    rows = []
+    for arch in ("smollm_360m", "mamba2_1p3b", "gemma2_2b"):
+        cfg = get_config(arch, tiny=True)
+        rng = jax.random.PRNGKey(0)
+        params = api.init_params(rng, cfg)
+        tokens = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size, jnp.int32)
+        _, cache = jax.jit(lambda p, t: api.prefill(p, {"tokens": t}, cfg, 64)
+                           )(params, tokens)
+        step = jax.jit(lambda p, c, t, q: api.decode_step(p, c, t, q, cfg))
+        tok = jnp.zeros((4,), jnp.int32)
+        pos = jnp.asarray(32, jnp.int32)
+        t = _time(lambda p, c: step(p, c, tok, pos)[0], params, cache, iters=5)
+        rows.append((f"real_decode/{arch}-tiny", t * 1e6,
+                     f"tok_s={4 / t:.0f}"))
+    return rows

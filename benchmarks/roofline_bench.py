@@ -1,0 +1,41 @@
+"""Roofline benchmark: reads the dry-run JSON artifacts (launch/dryrun.py)
+and emits the per-(arch x shape x mesh) roofline terms as CSV rows."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def bench_roofline():
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline/missing", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun")]
+    n_ok = n_skip = 0
+    for f in files:
+        rec = json.load(open(f))
+        key = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "SKIP":
+            n_skip += 1
+            rows.append((key, 0.0, "SKIP:" + rec["reason"][:60]))
+            continue
+        if rec["status"] != "OK":
+            rows.append((key, 0.0, "FAIL:" + rec.get("error", "?")[:60]))
+            continue
+        n_ok += 1
+        rl = rec["roofline"]
+        bound = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+        rows.append((key, bound * 1e6,
+                     f"dom={rl['dominant']},"
+                     f"tc={rl['t_compute'] * 1e3:.2f}ms,"
+                     f"tm={rl['t_memory'] * 1e3:.2f}ms,"
+                     f"tx={rl['t_collective'] * 1e3:.2f}ms,"
+                     f"useful={rl['useful_flops_ratio']:.3f},"
+                     f"mem_chip={rl['memory_per_chip'] / 1e9:.2f}GB"))
+    rows.append(("roofline/summary", 0.0, f"ok={n_ok},skip={n_skip}"))
+    return rows

@@ -1,0 +1,79 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--only X]``.
+
+Suites (one per paper table/figure — DESIGN.md §8):
+  fig1          BS / MTL sweeps (preliminary study)
+  table5        Profiler TI_B / TI_MT + decisions vs paper Table 4
+  fig5          DNNScaler vs Clipper throughput, 30 jobs
+  table6        power efficiency on MT jobs
+  fig7          adaptation-speed traces
+  fig9          SLO-change sensitivity
+  fig11         sole-MT check on B jobs
+  fig12         B+MT combination
+  llm           DNNScaler on the assigned architectures (TPU model)
+  burst         open-loop bursty arrivals: DNNScaler vs static (beyond paper)
+  alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
+  matcomp       ablation: matrix completion vs naive interpolation
+  kernels       Pallas kernel micro-benches (interpret mode)
+  real_decode   wall-clock tiny-model decode
+  roofline      per-(arch x shape x mesh) terms from the dry-run JSON
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def suites():
+    from benchmarks import kernel_benches, paper_benches, roofline_bench
+    return {
+        "fig1": paper_benches.bench_fig1_sweeps,
+        "table5": paper_benches.bench_table5_profiler,
+        "fig5": paper_benches.bench_fig5_throughput,
+        "table6": paper_benches.bench_table6_power,
+        "fig7": paper_benches.bench_fig7_traces,
+        "fig9": paper_benches.bench_fig9_sensitivity,
+        "fig11": paper_benches.bench_fig11_sole_mt,
+        "fig12": paper_benches.bench_fig12_combination,
+        "llm": paper_benches.bench_llm_serving,
+        "burst": paper_benches.bench_burst,
+        "alpha": paper_benches.bench_alpha_ablation,
+        "matcomp": paper_benches.bench_matrix_completion_ablation,
+        "matcomp_nl": paper_benches.bench_matcomp_nonlinear,
+        "kernels": kernel_benches.bench_kernels,
+        "real_decode": kernel_benches.bench_real_decode,
+        "roofline": roofline_bench.bench_roofline,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    table = suites()
+    names = args.only.split(",") if args.only else list(table)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        fn = table[name]
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            failures += 1
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.2f},{derived}")
+        print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},ok",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

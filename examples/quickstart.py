@@ -1,0 +1,55 @@
+"""Quickstart: serve a (tiny, real) model under DNNScaler on this host.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced SmolLM, measures real wall-clock latency, lets the Profiler
+choose Batching vs Multi-Tenancy, and runs the Scaler loop against a 4x-base
+latency SLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.controller import DNNScalerController
+from repro.models import api
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import RealExecutor
+
+
+def main():
+    cfg = get_config("smollm-360m", tiny=True)
+    rng = jax.random.PRNGKey(0)
+    params = api.init_params(rng, cfg)
+    print(f"model: {cfg.name} ({sum(x.size for x in jax.tree.leaves(params)):,} params)")
+
+    @jax.jit
+    def serve_fn(params, batch):
+        logits, _ = api.prefill(params, batch, cfg, capacity=48)
+        return logits
+
+    def make_batch(n):
+        return {"tokens": jax.random.randint(rng, (n, 32), 0, cfg.vocab_size,
+                                             jnp.int32)}
+
+    executor = RealExecutor(serve_fn, params, make_batch)
+    base = executor.mean_latency(1, 1)
+    slo = base * 8
+    print(f"base latency {base * 1e3:.1f}ms -> SLO {slo * 1e3:.1f}ms")
+
+    ctrl = DNNScalerController(executor, slo, m=8, n=4, max_bs=32, max_mtl=4)
+    print(f"profiler: TI_B={ctrl.profile.ti_b:.0f}% "
+          f"TI_MT={ctrl.profile.ti_mt:.0f}% -> {ctrl.approach}")
+
+    engine = ServingEngine(executor, slo, instance_launch_s=0.05)
+    acc = engine.run(ctrl, max_steps=40)
+    s = acc.summary()
+    a = ctrl.action()
+    print(f"steady state: bs={a.bs} mtl={a.mtl}")
+    print(f"served {s['items']} requests @ {s['throughput']:.1f}/s, "
+          f"p95 {s['p95_s'] * 1e3:.1f}ms (SLO {slo * 1e3:.1f}ms), "
+          f"attainment {s['slo_attainment']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Mixtral 8x22B — 8-expert top-2 MoE with sliding-window attention.
+
+[arXiv:2401.04088] 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8 experts top-2, SWA.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    source="arXiv:2401.04088",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    num_experts_per_tok=2,
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)
+
+TINY = CONFIG.replace(
+    name="mixtral-8x22b-tiny",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    num_experts=4,
+    num_experts_per_tok=2,
+    sliding_window=64,
+)

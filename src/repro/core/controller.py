@@ -1,0 +1,79 @@
+"""DNNScaler controller (paper §3.2): Profiler -> Scaler, plus baselines.
+
+DNNScalerController drives the serving engine for one job:
+  1. Profiler probes BS in {1,m} / MTL in {1,n}, picks Batching or
+     Multi-Tenancy (eq. 3-5).
+  2. The matching Scaler maintains p95 <= SLO while maximizing throughput
+     (binary search on BS, or matrix-completion + AIMD on MTL).
+
+StaticController fixes (bs, mtl) — used for the Fig. 1 sweeps and the
+Fig. 11/12 combination studies.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.clipper import ClipperController
+from repro.core.matrix_completion import LatencyEstimator
+from repro.core.profiler import Profiler, ProfileResult
+from repro.core.scaler import ALPHA, BatchScaler, MTScaler
+from repro.serving.engine import Action
+
+
+class DNNScalerController:
+    name = "dnnscaler"
+
+    def __init__(self, executor, slo_s: float, *,
+                 estimator: Optional[LatencyEstimator] = None,
+                 max_bs: int = 128, max_mtl: int = 10,
+                 m: int = 32, n: int = 8, decision_interval: int = 5):
+        self.slo = slo_s
+        self.max_mtl = max_mtl
+        self.estimator = estimator or LatencyEstimator(max_mtl=max_mtl)
+        self.profiler = Profiler(executor, m=m, n=n)
+        self.profile: ProfileResult = self.profiler.probe()
+
+        if self.profile.approach == "B":
+            self.scaler = BatchScaler(slo_s, max_bs=max_bs,
+                                      decision_interval=decision_interval)
+        else:
+            observed = self.profiler.mt_observations(self.profile)
+            self.scaler = MTScaler(slo_s, self.estimator, observed,
+                                   max_mtl=max_mtl,
+                                   decision_interval=decision_interval)
+
+    @property
+    def approach(self) -> str:
+        return self.profile.approach
+
+    def set_slo(self, slo_s: float) -> None:
+        self.slo = slo_s
+        self.scaler.set_slo(slo_s)
+
+    def action(self) -> Action:
+        return self.scaler.action()
+
+    def observe(self, p95: float, result: Optional[dict] = None) -> None:
+        self.scaler.observe(p95, result)
+
+
+class StaticController:
+    name = "static"
+
+    def __init__(self, bs: int = 1, mtl: int = 1):
+        self.bs = bs
+        self.mtl = mtl
+
+    def set_slo(self, slo_s: float) -> None:
+        pass
+
+    def action(self) -> Action:
+        return Action(bs=self.bs, mtl=self.mtl)
+
+    def observe(self, p95: float, result: Optional[dict] = None) -> None:
+        pass
+
+
+__all__ = ["DNNScalerController", "ClipperController", "StaticController",
+           "ALPHA"]

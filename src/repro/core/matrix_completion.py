@@ -1,0 +1,102 @@
+"""Matrix completion for MTL->latency estimation (paper §3.3.2).
+
+The paper profiles latency at MTL=1 and MTL=8 only, then recovers the full
+latency curve over MTL in [1, N] with SVD-based matrix completion (they use
+TFOCS convex optimization; we solve the same nuclear-norm relaxation with
+soft-impute — iterative singular-value thresholding, Mazumder et al. 2010).
+
+The matrix M has one row per *job* (a library of previously profiled jobs
+plus the current one) and one column per MTL in 1..N.  Rows are normalized by
+their MTL=1 latency so the low-rank structure captures scaling-curve shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def soft_impute(M: np.ndarray, mask: np.ndarray, *, lam: float = 0.05,
+                rank: Optional[int] = None, iters: int = 300,
+                tol: float = 1e-6) -> np.ndarray:
+    """Fill missing entries (mask==False) of M via iterative SVD thresholding.
+
+    lam is the singular-value shrinkage (relative to the largest sv);
+    rank optionally hard-truncates.
+    """
+    M = np.asarray(M, dtype=np.float64)
+    mask = np.asarray(mask, dtype=bool)
+    X = np.where(mask, M, 0.0)
+    col_mean = np.where(mask.any(0), (M * mask).sum(0) / np.maximum(mask.sum(0), 1), 0.0)
+    X = np.where(mask, M, np.broadcast_to(col_mean, M.shape))
+
+    prev = X.copy()
+    for _ in range(iters):
+        U, s, Vt = np.linalg.svd(X, full_matrices=False)
+        thr = lam * s[0] if s.size else 0.0
+        s_shrunk = np.maximum(s - thr, 0.0)
+        if rank is not None:
+            s_shrunk[rank:] = 0.0
+        Xlr = (U * s_shrunk) @ Vt
+        X = np.where(mask, M, Xlr)
+        delta = np.linalg.norm(X - prev) / max(np.linalg.norm(prev), 1e-12)
+        prev = X.copy()
+        if delta < tol:
+            break
+    return X
+
+
+class LatencyEstimator:
+    """Estimates latency(MTL) for a new job from two profiled points plus a
+    library of fully-profiled historical jobs."""
+
+    def __init__(self, max_mtl: int = 10):
+        self.max_mtl = max_mtl
+        self.library: list[np.ndarray] = []   # normalized rows, len max_mtl
+
+    def add_library_row(self, latencies_by_mtl: dict) -> None:
+        row = np.array([latencies_by_mtl[m] for m in range(1, self.max_mtl + 1)],
+                       dtype=np.float64)
+        self.library.append(row / row[0])
+
+    def estimate(self, observed: dict) -> np.ndarray:
+        """observed: {mtl: latency_s} (the paper uses {1: ..., 8: ...}).
+
+        Returns estimated latency for MTL = 1..max_mtl (seconds)."""
+        assert 1 in observed, "need the MTL=1 point for normalization"
+        base = observed[1]
+        row = np.zeros(self.max_mtl)
+        mask_row = np.zeros(self.max_mtl, dtype=bool)
+        for m, lat in observed.items():
+            if 1 <= m <= self.max_mtl:
+                row[m - 1] = lat / base
+                mask_row[m - 1] = True
+
+        if self.library:
+            M = np.vstack(self.library + [row])
+            mask = np.vstack([np.ones_like(r, dtype=bool) for r in self.library]
+                             + [mask_row])
+            filled = soft_impute(M, mask, rank=min(3, M.shape[0]))
+            est = filled[-1]
+        else:
+            # no library: fall back to linear interpolation/extrapolation in MTL
+            ms = np.array(sorted(observed))
+            vals = np.array([observed[m] / base for m in ms])
+            est = np.interp(np.arange(1, self.max_mtl + 1), ms, vals)
+            if len(ms) >= 2:  # extrapolate past the last observation
+                slope = (vals[-1] - vals[0]) / (ms[-1] - ms[0])
+                for i in range(self.max_mtl):
+                    m = i + 1
+                    if m > ms[-1]:
+                        est[i] = vals[-1] + slope * (m - ms[-1])
+        est = np.maximum(est, 1e-9)
+        # physical prior: co-locating more instances never reduces latency
+        est = np.maximum.accumulate(est)
+        return est * base
+
+    def pick_mtl(self, observed: dict, slo_s: float) -> tuple[int, np.ndarray]:
+        """Largest MTL whose estimated latency is below the SLO (Alg. 1 l.32)."""
+        est = self.estimate(observed)
+        ok = [m for m in range(1, self.max_mtl + 1) if est[m - 1] < slo_s]
+        return (max(ok) if ok else 1), est

@@ -1,0 +1,150 @@
+"""Scaler module (paper §3.2.2, Algorithm 1 lines 10-41).
+
+BatchScaler — pseudo binary search over batch size in [1, maxBS] with the
+hysteresis band [alpha*SLO, SLO] (alpha = 0.85); dynamic batch sizing means
+changes are free.  MTScaler — jump to the matrix-completion-estimated MTL,
+then AIMD (+1 under alpha*SLO, -1 over SLO).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.serving.engine import Action
+
+ALPHA = 0.85
+
+
+class BatchScaler:
+    """Algorithm 1, lines 10-29."""
+
+    def __init__(self, slo_s: float, *, max_bs: int = 128, alpha: float = ALPHA,
+                 decision_interval: int = 5):
+        self.slo = slo_s
+        self.alpha = alpha
+        self.min_bs = 1
+        self.max_bs = max_bs
+        self.bs = 1
+        self.hard_max = max_bs
+        self.decision_interval = decision_interval
+        self._steps = 0
+        self.infeasible = False
+        self.converged_steps = 0
+        self._viol_streak = 0   # paper §4.4: short-lived spikes are skipped;
+                                # only persistent violations trigger descent
+        # Damping beyond the paper: when no batch size lands inside the
+        # [alpha*SLO, SLO] band, Algorithm 1 as written oscillates between the
+        # last feasible BS and the smallest infeasible one; remembering the
+        # infeasible point pins the search at the feasible neighbour.
+        self._known_bad: Optional[int] = None
+
+    def set_slo(self, slo_s: float) -> None:
+        if slo_s != self.slo:
+            self.slo = slo_s
+            # re-open the search bounds on SLO change (paper §4.5)
+            self.min_bs, self.max_bs = 1, self.hard_max
+            self._known_bad = None
+
+    def action(self) -> Action:
+        return Action(bs=self.bs, mtl=1)
+
+    def observe(self, p95: float, result: Optional[dict] = None) -> None:
+        self._steps += 1
+        if self._steps % self.decision_interval:
+            return
+        if self.converged_steps >= 12:
+            # a known-bad point may have been a transient spike — allow the
+            # search to re-probe upward after a long stable stretch
+            self._known_bad = None
+            self.converged_steps = 0
+        if self.alpha * self.slo <= p95 <= self.slo:
+            self.converged_steps += 1
+            self._viol_streak = 0
+            return                                        # line 13-14
+        if p95 < self.alpha * self.slo:                   # line 15-18
+            self._viol_streak = 0
+            if self.bs == self.hard_max:
+                return                # largest possible: no further gain
+            self.min_bs = self.bs
+            cand = min(math.ceil((self.min_bs + self.max_bs) / 2),
+                       self.hard_max)
+            if self._known_bad is not None and cand >= self._known_bad:
+                cand = self._known_bad - 1
+            if cand <= self.bs:
+                self.converged_steps += 1
+                return
+            self.bs = cand
+        else:                                             # line 19-29
+            self._viol_streak += 1
+            if self._viol_streak < 2:
+                return                # skip short-lived spikes (paper §4.4)
+            self._known_bad = self.bs if self._known_bad is None else \
+                min(self._known_bad, self.bs)
+            if self.bs == 1:
+                self.infeasible = True                    # line 20-21
+                return
+            if self.bs == self.min_bs:                    # line 22-25
+                self.max_bs = self.bs
+                self.min_bs = 1
+                self.bs = max(math.floor((self.min_bs + self.max_bs) / 2), 1)
+            else:                                         # line 26-29
+                self.max_bs = self.bs
+                self.bs = max(math.floor((self.min_bs + self.max_bs) / 2), 1)
+        self.converged_steps = 0
+
+
+class MTScaler:
+    """Algorithm 1, lines 30-41: matrix-completion jump + AIMD refinement."""
+
+    def __init__(self, slo_s: float, estimator, observed: dict, *,
+                 max_mtl: int = 10, alpha: float = ALPHA,
+                 decision_interval: int = 5):
+        self.slo = slo_s
+        self.alpha = alpha
+        self.max_mtl = max_mtl
+        self.estimator = estimator
+        self.observed = dict(observed)
+        self.mtl, self.estimate = estimator.pick_mtl(observed, slo_s)  # line 31-32
+        self.decision_interval = decision_interval
+        self._steps = 0
+        self.converged_steps = 0
+        self._viol_streak = 0
+        self._known_bad: Optional[int] = None   # oscillation damping (see
+                                                # BatchScaler)
+
+    def set_slo(self, slo_s: float) -> None:
+        if slo_s != self.slo:
+            self._known_bad = None
+        self.slo = slo_s
+
+    def action(self) -> Action:
+        return Action(bs=1, mtl=self.mtl)
+
+    def observe(self, p95: float, result: Optional[dict] = None) -> None:
+        self._steps += 1
+        if self._steps % self.decision_interval:
+            return
+        if self.converged_steps >= 12:
+            self._known_bad = None    # transient-spike amnesty (see above)
+            self.converged_steps = 0
+        if self.alpha * self.slo <= p95 <= self.slo:      # line 34-35
+            self.converged_steps += 1
+            self._viol_streak = 0
+            return
+        if p95 < self.alpha * self.slo:                   # line 36-38
+            self._viol_streak = 0
+            nxt = self.mtl + 1
+            if nxt <= self.max_mtl and nxt != self._known_bad:
+                self.mtl = nxt
+                self.converged_steps = 0
+            else:
+                self.converged_steps += 1
+        elif p95 > self.slo:                              # line 39-41
+            self._viol_streak += 1
+            if self._viol_streak < 2:
+                return                # skip short-lived spikes (paper §4.4)
+            self._known_bad = self.mtl
+            if self.mtl > 1:
+                self.mtl -= 1
+                self.converged_steps = 0

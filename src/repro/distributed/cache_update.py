@@ -1,0 +1,72 @@
+"""Sharded KV-cache append (§Perf, append-outside-scan decode).
+
+A dynamic-update-slice at a traced position into a *model-sharded* sequence
+axis makes GSPMD all-gather the whole cache (measured: +790 ms collective on
+qwen2 decode_32k).  This helper performs the append under ``shard_map``: each
+device checks whether the global slot lands in its local shard and writes the
+one-token slice locally — O(token) traffic, zero collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def _axes_tuple(ax):
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+def _append_local(c_loc, d_loc, pos, *, seq_axes, mesh_axis_sizes, axis=3):
+    """Per-device body: write d (…,1,…) into c at global slot pos (mod cap)."""
+    s_loc = c_loc.shape[axis]
+    shard_idx = jnp.zeros((), jnp.int32)
+    total = 1
+    for a in seq_axes:
+        shard_idx = shard_idx * mesh_axis_sizes[a] + lax.axis_index(a)
+        total *= mesh_axis_sizes[a]
+    cap = s_loc * total
+    slot = pos % cap
+    start = shard_idx * s_loc
+    local = jnp.clip(slot - start, 0, s_loc - 1)
+    in_range = (slot >= start) & (slot < start + s_loc)
+    cur = lax.dynamic_slice_in_dim(c_loc, local, 1, axis=axis)
+    newv = jnp.where(in_range, d_loc.astype(c_loc.dtype), cur)
+    return lax.dynamic_update_slice_in_dim(c_loc, newv, local, axis=axis)
+
+
+def append_kv(cache_leaf, delta_leaf, pos, spec: P, minfo, axis: int = 3):
+    """cache (count,B,KV,S,hd) with PartitionSpec `spec`; delta (…,1,…)."""
+    seq_axes = _axes_tuple(spec[axis]) if axis < len(spec) else ()
+    if not seq_axes:
+        cap = cache_leaf.shape[axis]
+        return lax.dynamic_update_slice_in_dim(
+            cache_leaf, delta_leaf.astype(cache_leaf.dtype), pos % cap,
+            axis=axis)
+
+    delta_spec = list(spec)
+    delta_spec[axis] = None
+    fn = functools.partial(_append_local, seq_axes=seq_axes,
+                           mesh_axis_sizes=minfo.axis_sizes, axis=axis)
+    return jax.shard_map(
+        fn, mesh=minfo.mesh,
+        in_specs=(spec, P(*delta_spec), P()),
+        out_specs=spec,
+    )(cache_leaf, delta_leaf, pos)
+
+
+def apply_cache_deltas(cache, deltas, pos, cache_specs, minfo):
+    """Walk the cache pytree: K/V leaves (S axis = -2) get the sharded append;
+    state leaves (matching shapes) are replaced wholesale."""
+    def go(c, d, spec):
+        if c.shape == d.shape:
+            return d.astype(c.dtype)
+        return append_kv(c, d, pos, spec, minfo, axis=c.ndim - 2)
+
+    return jax.tree.map(go, cache, deltas, cache_specs)

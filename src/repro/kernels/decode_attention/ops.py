@@ -1,0 +1,89 @@
+"""Jit'd public wrapper for the decode-attention Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "logit_cap", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,        # (B, H, hd)
+    k_cache: jax.Array,  # (B, S, KV, hd)
+    v_cache: jax.Array,  # (B, S, KV, hd)
+    pos,                 # scalar int32
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    block_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = k_cache.shape[1]
+
+    q3 = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    k3 = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, Sp, hd)
+    v3 = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, Sp, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = decode_attention_fwd(q3, k3, v3, pos_arr, window=window,
+                               logit_cap=logit_cap, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "logit_cap", "block_k", "interpret"))
+def decode_attention_kvmajor(
+    q: jax.Array,        # (B, H, hd)
+    k_cache: jax.Array,  # (B, KV, S, hd) — the model's attention-native layout
+    v_cache: jax.Array,
+    pos,
+    *,
+    window=None,
+    logit_cap=None,
+    block_k: int = 256,
+    interpret=None,
+):
+    """Like decode_attention but takes the (B, KV, S, hd) cache layout the
+    model uses — a pure reshape, no transpose."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, H, hd = q.shape
+    _, KV, S, _ = k_cache.shape
+    G = H // KV
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = k_cache.shape[2]
+    q3 = q.reshape(B * KV, G, hd)
+    k3 = k_cache.reshape(B * KV, Sp, hd)
+    v3 = v_cache.reshape(B * KV, Sp, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    out = decode_attention_fwd(q3, k3, v3, pos_arr, window=window,
+                               logit_cap=logit_cap, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, H, hd)

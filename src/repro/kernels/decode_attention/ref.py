@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, hd)
+    k_cache: jax.Array,  # (B, S, KV, hd)
+    v_cache: jax.Array,  # (B, S, KV, hd)
+    pos,                 # scalar int32 — new token index; cache valid [0, pos]
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache.astype(jnp.float32))
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    kpos = jnp.arange(S)
+    mask = kpos <= pos
+    if window is not None:
+        mask = mask & (kpos > pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Jit'd public wrapper for the flash-attention Pallas kernel.
+
+Accepts model-layout tensors (B, T, H, hd) / (B, S, KV, hd), handles GQA
+folding, padding to block multiples, and interpret-mode selection (CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_cap", "q_offset",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,                # (B, Tq, H, hd)
+    k: jax.Array,                # (B, Tk, KV, hd)
+    v: jax.Array,                # (B, Tk, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Tq, H, hd = q.shape
+    _, Tk, KV, _ = k.shape
+    G = H // KV
+
+    block_q = min(block_q, Tq) if Tq >= 8 else Tq
+    block_k = min(block_k, Tk) if Tk >= 8 else Tk
+
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    Tqp, Tkp = qp.shape[1], kp.shape[1]
+
+    # (B, T, KV, G, hd) -> (B*KV, G, T, hd)
+    q4 = qp.reshape(B, Tqp, KV, G, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B * KV, G, Tqp, hd)
+    k3 = kp.transpose(0, 2, 1, 3).reshape(B * KV, Tkp, hd)
+    v3 = vp.transpose(0, 2, 1, 3).reshape(B * KV, Tkp, hd)
+
+    # Padded K positions are masked: causal masking handles the q-pad rows;
+    # for k-pad we rely on kpos > q_max when causal.  For non-causal inputs we
+    # must mask explicitly — emulate by setting window/causal masks upstream;
+    # here pad keys get position >= Tk and a -inf via explicit valid check:
+    if pad_k and not causal:
+        # cheap fallback: zero-pad keys produce uniform logits; mask by
+        # appending a window over valid length instead — handled by padding
+        # with NEG values in k is incorrect, so use causal=False + valid mask
+        # path in the reference. For simplicity, require no k-pad when
+        # non-causal (callers pass block-divisible encoder lengths).
+        raise ValueError("non-causal flash kernel requires Tk % block_k == 0")
+
+    out = flash_attention_fwd(
+        q4, k3, v3, causal=causal, window=window, logit_cap=logit_cap,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    out = out.reshape(B, KV, G, Tqp, hd).transpose(0, 3, 1, 2, 4).reshape(
+        B, Tqp, H, hd)
+    return out[:, :Tq]

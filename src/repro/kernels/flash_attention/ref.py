@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive full-matrix)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(
+    q: jax.Array,                # (B, Tq, H, hd)
+    k: jax.Array,                # (B, Tk, KV, hd)
+    v: jax.Array,                # (B, Tk, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Tq, H, hd = q.shape
+    _, Tk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qh = q.reshape(B, Tq, KV, G, hd).astype(jnp.float32) * scale
+    kh = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh, kh)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    qpos = q_offset + jnp.arange(Tq)
+    kpos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)

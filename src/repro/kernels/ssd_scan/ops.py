@@ -1,0 +1,41 @@
+"""Jit'd public wrapper for the SSD-scan Pallas kernel (model layout)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,     # (B, T, H, P)
+    dt: jax.Array,    # (B, T, H)  (already softplus'd)
+    A: jax.Array,     # (H,) negative reals
+    Bm: jax.Array,    # (B, T, N)
+    Cm: jax.Array,    # (B, T, N)
+    *,
+    chunk: int = 128,
+    interpret=None,
+):
+    """Returns (y (B,T,H,P) f32, final_state (B,H,P,N) f32)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, T, H, P = x.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+           ).transpose(0, 2, 1, 3)                       # (B,H,T,P)
+    dA = (dt.astype(jnp.float32) * A).transpose(0, 2, 1)[..., None]  # (B,H,T,1)
+
+    y, final_state = ssd_scan_fwd(xdt, dA, Bm, Cm, chunk=chunk,
+                                  interpret=interpret)
+    return y.transpose(0, 2, 1, 3), final_state

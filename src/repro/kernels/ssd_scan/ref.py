@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: naive sequential recurrence.
+
+Independent of the chunked implementation — recurses token by token:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . h_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    """x: (B,T,H,P); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N).
+
+    Returns (y (B,T,H,P) f32, final_state (B,H,P,N) f32)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                     # (B,H,P) (B,H) (B,N) (B,N)
+        dA = jnp.exp(dtt * A)                     # (B,H)
+        h = h * dA[:, :, None, None] + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    final, ys = lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final

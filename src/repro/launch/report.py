@@ -1,0 +1,101 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report \
+        --baseline experiments/dryrun --final experiments/dryrun_final
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_dir(d: str) -> dict:
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+        out[key] = r
+    return out
+
+
+def fmt_ms(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.1f}s"
+    return f"{x * 1e3:.2f}ms"
+
+
+def roofline_table(recs: dict, mesh: str, variant: str) -> str:
+    from repro.configs.base import ARCH_IDS, INPUT_SHAPES
+    lines = [
+        "| arch | shape | status | t_comp | t_mem | t_coll | dominant | "
+        "useful | mem/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            r = recs.get((arch, shape, mesh, variant))
+            if r is None:
+                continue
+            if r["status"] == "SKIP":
+                lines.append(f"| {arch} | {shape} | SKIP (full attention; "
+                             f"DESIGN.md) | — | — | — | — | — | — |")
+                continue
+            if r["status"] != "OK":
+                lines.append(f"| {arch} | {shape} | **FAIL** | — | — | — | — "
+                             f"| — | — |")
+                continue
+            rl = r["roofline"]
+            mem = r["memory_analysis"]
+            live = (mem["argument_size"] + mem["temp_size"]
+                    - mem["alias_size"]) / 1e9
+            lines.append(
+                f"| {arch} | {shape} | OK | {fmt_ms(rl['t_compute'])} | "
+                f"{fmt_ms(rl['t_memory'])} | {fmt_ms(rl['t_collective'])} | "
+                f"{rl['dominant']} | {rl['useful_flops_ratio']:.2f} | "
+                f"{live:.1f}GB |")
+    return "\n".join(lines)
+
+
+def collect_summary(recs: dict, variant: str) -> str:
+    n = {"OK": 0, "SKIP": 0, "FAIL": 0}
+    for (a, s, m, v), r in recs.items():
+        if v == variant:
+            n[r["status"]] = n.get(r["status"], 0) + 1
+    return f"{n['OK']} OK / {n['SKIP']} SKIP / {n['FAIL']} FAIL"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    ap.add_argument("--final", default="experiments/dryrun_final")
+    ap.add_argument("--out", default="experiments/roofline_tables.md")
+    args = ap.parse_args()
+
+    base = load_dir(args.baseline)
+    final = load_dir(args.final)
+
+    parts = []
+    parts.append("### Baseline roofline — single-pod 16x16 (256 chips)\n")
+    parts.append(f"_{collect_summary(base, 'baseline')} "
+                 f"(mesh=single+multi combined)_\n")
+    parts.append(roofline_table(base, "single", "baseline"))
+    parts.append("\n### Baseline roofline — multi-pod 2x16x16 (512 chips)\n")
+    parts.append(roofline_table(base, "multi", "baseline"))
+    if final:
+        parts.append("\n### Final (optimized defaults) — single-pod\n")
+        parts.append(f"_{collect_summary(final, 'final')}_\n")
+        parts.append(roofline_table(final, "single", "final"))
+        parts.append("\n### Final (optimized defaults) — multi-pod\n")
+        parts.append(roofline_table(final, "multi", "final"))
+
+    text = "\n".join(parts) + "\n"
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    open(args.out, "w").write(text)
+    print(f"wrote {args.out} ({len(text)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Serving launcher: run a job (paper DNN or assigned LLM arch) under a
+controller and report throughput / p95 / power efficiency.
+
+    PYTHONPATH=src python -m repro.launch.serve --job 5 --controller dnnscaler
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --controller clipper --slo-ms 50
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --tiny --real
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import (ClipperController, DNNScalerController,
+                                   StaticController)
+from repro.core.matrix_completion import LatencyEstimator
+from repro.serving import device_model as dm
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import RealExecutor, SimExecutor
+from repro.serving.workload import PAPER_JOBS
+
+
+def build_library(estimator: LatencyEstimator, exclude_id: int) -> None:
+    """Seed matrix completion with 'historically profiled' jobs."""
+    for j in PAPER_JOBS[:8]:
+        if j.job_id == exclude_id:
+            continue
+        prof = j.profile()
+        estimator.add_library_row(
+            {m: dm.mt_latency(dm.TESLA_P40, prof, 1, m) for m in range(1, 11)})
+
+
+def make_controller(name: str, executor, slo_s: float, job_id: int = -1,
+                    bs: int = 1, mtl: int = 1):
+    if name == "dnnscaler":
+        est = LatencyEstimator(max_mtl=10)
+        build_library(est, job_id)
+        return DNNScalerController(executor, slo_s, estimator=est)
+    if name == "clipper":
+        return ClipperController(slo_s)
+    return StaticController(bs=bs, mtl=mtl)
+
+
+def real_executor_for(arch: str, tiny: bool) -> tuple:
+    from repro.configs.base import get_config
+    from repro.models import api
+    cfg = get_config(arch, tiny=tiny)
+    rng = jax.random.PRNGKey(0)
+    params = api.init_params(rng, cfg)
+
+    @jax.jit
+    def fwd(params, batch):
+        loss, _ = api.train_loss(params, batch, cfg, remat=False)
+        return loss
+
+    def make_batch(n):
+        from repro.configs.base import InputShape
+        shp = InputShape("serve", 128, n, "train")
+        return api.make_batch(rng, cfg, shp)
+
+    return RealExecutor(fwd, params, make_batch), cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--job", type=int, default=None, help="paper job # (1-30)")
+    ap.add_argument("--arch", default=None, help="assigned architecture id")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--real", action="store_true",
+                    help="wall-clock executor (tiny models)")
+    ap.add_argument("--controller", default="dnnscaler",
+                    choices=["dnnscaler", "clipper", "static"])
+    ap.add_argument("--bs", type=int, default=1)
+    ap.add_argument("--mtl", type=int, default=1)
+    ap.add_argument("--slo-ms", type=float, default=None)
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.job is not None:
+        job = PAPER_JOBS[args.job - 1]
+        prof = job.profile()
+        slo = args.slo_ms / 1e3 if args.slo_ms else job.slo_s
+        executor = SimExecutor(prof, seed=args.seed)
+        ctrl = make_controller(args.controller, executor, slo, job.job_id,
+                               args.bs, args.mtl)
+        engine = ServingEngine(SimExecutor(prof, seed=args.seed + 1), slo)
+        label = f"job{job.job_id} {prof.name}"
+    elif args.arch and args.real:
+        executor, cfg = real_executor_for(args.arch, args.tiny)
+        base = executor.mean_latency(1, 1)
+        slo = args.slo_ms / 1e3 if args.slo_ms else base * 4
+        ctrl = make_controller(args.controller, executor, slo)
+        engine = ServingEngine(executor, slo, instance_launch_s=0.2)
+        label = f"{cfg.name} (real)"
+    else:
+        from repro.configs.base import get_config
+        cfg = get_config(args.arch)
+        prof = dm.llm_profile(cfg, mode="decode")
+        base = dm.batch_latency(dm.TPU_V5E, prof, 1)
+        slo = args.slo_ms / 1e3 if args.slo_ms else base * 4
+        executor = SimExecutor(prof, device=dm.TPU_V5E, seed=args.seed,
+                               mesh_shape=(16, 16))
+        ctrl = make_controller(args.controller, executor, slo)
+        engine = ServingEngine(
+            SimExecutor(prof, device=dm.TPU_V5E, seed=args.seed + 1,
+                        mesh_shape=(16, 16)), slo)
+        label = f"{cfg.name} (TPU submesh tenancy)"
+
+    acc = engine.run(ctrl, max_steps=args.steps)
+    s = acc.summary()
+    act = ctrl.action()
+    approach = getattr(ctrl, "approach", args.controller)
+    print(f"{label}: controller={args.controller} approach={approach} "
+          f"steady(bs={act.bs}, mtl={act.mtl})")
+    print(f"  throughput {s['throughput']:.1f}/s  p95 {s['p95_s']*1e3:.1f}ms "
+          f"(SLO {slo*1e3:.1f}ms)  attainment {s['slo_attainment']:.3f}  "
+          f"power_eff {s['power_efficiency']:.2f}/W")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,501 @@
+"""Static analysis of optimized HLO text: per-chip FLOPs, HBM traffic and
+collective link-bytes — *with while-loop (lax.scan) trip-count multipliers*.
+
+``compiled.cost_analysis()`` visits each instruction once, so an 80-layer
+model lowered as ``lax.scan`` under-reports by 80x.  This module parses the
+module text, builds the computation call graph (while trip counts come from
+the ``backend_config known_trip_count`` attached by XLA, falling back to the
+largest comparison constant in the loop condition), and sums:
+
+  * flops: 2 * prod(output dims) * prod(lhs contracting dims) per ``dot``
+    (fusion internals included; convolutions unused in this codebase)
+  * hbm bytes: result + operand bytes of top-level instructions, operands
+    resolved through a per-computation symbol table (fusion internals are
+    skipped — they live in registers/VMEM).  This matches XLA's
+    "bytes accessed" convention (producer+consumer both count).
+  * collective link-bytes per chip, with ring-algorithm factors:
+      all-gather: 1 x result (result is the gathered full shape)
+      all-reduce: 2 x result (reduce + broadcast phases)
+      reduce-scatter: 1 x operand (full input crosses links)
+      all-to-all / collective-permute: 1 x result
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n"\s*:\s*"(\d+)"')
+
+
+def _split_result_opcode(rhs: str) -> tuple[str, str]:
+    """Split 'f32[2,3]{1,0} dot(%a, %b), attrs' -> ('f32[2,3]{1,0} ', 'dot').
+
+    Tuple results '(s32[], f32[2])' are handled by skipping the balanced
+    leading paren group before locating the opcode token."""
+    i = 0
+    if rhs.startswith("("):
+        depth = 0
+        for j, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    i = j + 1
+                    break
+    p = rhs.find("(", i)
+    if p < 0:
+        return rhs, ""
+    head = rhs[:p]
+    tokens = head[i:].split()
+    opcode = tokens[-1] if tokens else ""
+    result_head = rhs[:i] + " ".join(tokens[:-1])
+    if not re.fullmatch(r"[a-z][a-z0-9\-]*", opcode or ""):
+        return rhs, ""
+    return result_head, opcode
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "get-dimension-size",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+_F32_AS_BF16 = False  # set by analyze_hlo; see its docstring
+
+
+def _shape_bytes_str(s: str) -> int:
+    """Sum bytes of every shape literal appearing in s."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(s):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        if _F32_AS_BF16 and dtype == "f32":
+            b = 2
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _operand_region(rhs: str) -> str:
+    """Text inside the instruction's operand parens (handles nesting)."""
+    i = rhs.find("(")
+    if i < 0:
+        return ""
+    depth = 0
+    for j in range(i, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[i + 1:j]
+    return rhs[i + 1:]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rhs: str
+    opcode: str
+    result_head: str           # text before the opcode (shapes of result)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list
+    symtab: dict               # name -> shape string (results + params)
+
+
+def parse_module(text: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HEADER_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), bool(m.group(1)), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                # header params: "name: f32[2,3]" pairs
+                for pm in re.finditer(r"([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])",
+                                      line):
+                    cur.symtab[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        head, opcode = _split_result_opcode(rhs)
+        cur.symtab[name] = head
+        cur.instrs.append(Instr(name, rhs, opcode, head))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, symtab: dict) -> float:
+    if ins.opcode != "dot":
+        return 0.0
+    m = _SHAPE_RE.search(ins.result_head)
+    if not m:
+        return 0.0
+    out_elems = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            out_elems *= int(d)
+    ops = re.findall(r"%([\w.\-]+)", _operand_region(ins.rhs))
+    cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    if not ops or not cd_m:
+        return 0.0
+    lhs_shape = symtab.get(ops[0], "")
+    lm = _SHAPE_RE.search(lhs_shape)
+    if not lm:
+        return 0.0
+    lhs_dims = [int(x) for x in lm.group(2).split(",")] if lm.group(2) else []
+    contract = 1
+    for idx in (cd_m.group(1).split(",") if cd_m.group(1) else []):
+        i = int(idx)
+        if i < len(lhs_dims):
+            contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _operand_bytes(ins: Instr, symtab: dict) -> int:
+    region = _operand_region(ins.rhs)
+    total = 0
+    for name in re.findall(r"%([\w.\-]+)", region):
+        total += _shape_bytes_str(symtab.get(name, ""))
+    # inline-shaped operands (rare in optimized text)
+    if not total:
+        total = _shape_bytes_str(region)
+    return total
+
+
+def _while_trip(ins: Instr, comps: dict) -> int:
+    m = _TRIP_RE.search(ins.rhs)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+    if cm and cm.group(1) in comps:
+        best = 1
+        for ci in comps[cm.group(1)].instrs:
+            for k in re.finditer(r"constant\((\d+)\)", ci.rhs):
+                best = max(best, int(k.group(1)))
+        return best
+    return 1
+
+
+def _fusion_bytes(ins: Instr, caller_symtab: dict, callee: Computation) -> int:
+    """Effective HBM bytes of a fusion call.
+
+    A fusion reads each parameter either wholly, or — when every internal
+    consumer is a (dynamic-)slice/gather — only the sliced region; a fusion
+    whose root is a dynamic-update-slice writes (and reads) only the update
+    region of the aliased buffer.  ``convert`` ops are traced through
+    transparently (XLA-CPU bf16 legalization).  This mirrors XLA's
+    HloCostAnalysis treatment and stops full KV caches being charged per
+    scanned layer."""
+    param_names: dict[int, str] = {}
+    by_name: dict[str, Instr] = {}
+    consumers: dict[str, list] = defaultdict(list)
+    root: Optional[Instr] = None
+    for ci in callee.instrs:
+        by_name[ci.name] = ci
+        if ci.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ci.rhs)
+            if m:
+                param_names[int(m.group(1))] = ci.name
+        for opn in re.findall(r"%([\w.\-]+)", _operand_region(ci.rhs)):
+            consumers[opn].append(ci)
+        root = ci  # last instr is ROOT in printed HLO
+    call_ops = re.findall(r"%([\w.\-]+)", _operand_region(ins.rhs))
+
+    def trace_operand(name: str) -> str:
+        """Follow converts/copies/bitcasts back to their source name."""
+        seen = 0
+        while name in by_name and by_name[name].opcode in (
+                "convert", "copy", "bitcast") and seen < 20:
+            ops_ = re.findall(r"%([\w.\-]+)",
+                              _operand_region(by_name[name].rhs))
+            if not ops_:
+                break
+            name = ops_[0]
+            seen += 1
+        return name
+
+    def effective_consumers(name: str, depth: int = 0) -> list:
+        out = []
+        for c in consumers.get(name, []):
+            if c.opcode in ("convert", "copy", "bitcast") and depth < 20:
+                out.extend(effective_consumers(c.name, depth + 1))
+            else:
+                out.append(c)
+        return out
+
+    # trace root through trailing converts
+    eff_root = root
+    while (eff_root is not None and eff_root.opcode in ("convert", "copy",
+                                                        "bitcast")):
+        ops_ = re.findall(r"%([\w.\-]+)", _operand_region(eff_root.rhs))
+        if not ops_ or ops_[0] not in by_name:
+            break
+        eff_root = by_name[ops_[0]]
+
+    total = 0
+    dus_buffer_param: Optional[str] = None
+    if eff_root is not None and eff_root.opcode == "dynamic-update-slice":
+        r_ops = re.findall(r"%([\w.\-]+)", _operand_region(eff_root.rhs))
+        if r_ops:
+            dus_buffer_param = trace_operand(r_ops[0])
+        upd = callee.symtab.get(r_ops[1], "") if len(r_ops) > 1 else ""
+        total += 2 * _shape_bytes_str(upd)      # read+write update region
+    else:
+        total += _shape_bytes_str(ins.result_head)
+
+    for ordinal, pname in param_names.items():
+        if pname == dus_buffer_param:
+            continue                             # aliased in-place buffer
+        cons = effective_consumers(pname)
+        if cons and all(c.opcode in ("dynamic-slice", "slice", "gather")
+                        for c in cons):
+            total += sum(_shape_bytes_str(c.result_head) for c in cons)
+        else:
+            if ordinal < len(call_ops):
+                total += _shape_bytes_str(
+                    caller_symtab.get(call_ops[ordinal], ""))
+    return total
+
+
+def _is_pure_convert(comp: Computation) -> bool:
+    """True for XLA-CPU bf16-legalization fusions (a lone convert)."""
+    real = [i for i in comp.instrs if i.opcode not in ("parameter",)]
+    return len(real) == 1 and real[0].opcode == "convert"
+
+
+def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
+    """Analyze optimized HLO text.
+
+    f32_as_bf16: the XLA *CPU* backend legalizes every bf16 op to f32,
+    inserting whole-tensor converts that would not exist on TPU.  With this
+    flag (default) pure-convert instructions are skipped and f32 shapes are
+    charged at 2 bytes, recovering TPU-like traffic.  Caveat: genuinely-f32
+    tensors (optimizer states, softmax accumulators) are then undercounted
+    2x — noted where it matters in EXPERIMENTS.md.
+    """
+    global _F32_AS_BF16
+    _F32_AS_BF16 = f32_as_bf16
+    comps, entry = parse_module(text)
+
+    multipliers: dict[str, float] = defaultdict(float)
+    fusion_callees: set[str] = set()
+    seen_stack: set[str] = set()
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        seen_stack.add(name)
+        multipliers[name] += mult
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = _while_trip(ins, comps)
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                if bm:
+                    visit(bm.group(1), mult * trip)
+                if cm:
+                    visit(cm.group(1), mult * (trip + 1))
+            elif ins.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                if m:
+                    fusion_callees.add(m.group(1))
+                    visit(m.group(1), mult)
+            elif ins.opcode == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.rhs)
+                if m:
+                    for c in m.group(1).split(","):
+                        visit(c.strip().lstrip("%"), mult)
+            else:
+                for attr in ("to_apply", "calls"):
+                    m = re.search(rf"{attr}=%?([\w.\-]+)", ins.rhs)
+                    if m:
+                        visit(m.group(1), mult)
+        seen_stack.discard(name)
+
+    if entry:
+        visit(entry, 1.0)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+    coll_count = {k: 0 for k in _COLLECTIVES}
+
+    for name, comp in comps.items():
+        mult = multipliers.get(name, 0.0)
+        if mult == 0.0:
+            continue
+        in_fusion = name in fusion_callees
+        for ins in comp.instrs:
+            op = ins.opcode
+            flops += mult * _dot_flops(ins, comp.symtab)
+            if f32_as_bf16 and op == "convert":
+                continue
+            if f32_as_bf16 and op == "fusion":
+                m_ = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                if m_ and m_.group(1) in comps and _is_pure_convert(
+                        comps[m_.group(1)]):
+                    continue
+            if not in_fusion and op and op not in _SKIP_BYTES_OPS:
+                if op in ("dynamic-slice", "slice", "gather"):
+                    # reads only the slice, writes the slice
+                    nb = 2 * _shape_bytes_str(ins.result_head)
+                elif op in ("dynamic-update-slice", "scatter"):
+                    # in-place: reads + writes the update region only
+                    ops_ = re.findall(r"%([\w.\-]+)",
+                                      _operand_region(ins.rhs))
+                    upd = comp.symtab.get(ops_[1], "") if len(ops_) > 1 else ""
+                    nb = 2 * _shape_bytes_str(upd)
+                elif op == "fusion":
+                    m_ = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                    callee = comps.get(m_.group(1)) if m_ else None
+                    if callee is not None:
+                        nb = _fusion_bytes(ins, comp.symtab, callee)
+                    else:
+                        nb = (_shape_bytes_str(ins.result_head) +
+                              _operand_bytes(ins, comp.symtab))
+                else:
+                    nb = (_shape_bytes_str(ins.result_head) +
+                          _operand_bytes(ins, comp.symtab))
+                hbm += mult * nb
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                if base == "reduce-scatter":
+                    nb = _operand_bytes(ins, comp.symtab)
+                elif base == "all-reduce":
+                    nb = 2 * _shape_bytes_str(ins.result_head)
+                else:
+                    nb = _shape_bytes_str(ins.result_head)
+                coll_bytes[base] += mult * nb
+                coll_count[base] += int(mult)
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "coll_bytes": coll_bytes,
+        "coll_count": coll_count,
+        "total_coll_bytes": sum(coll_bytes.values()),
+        "n_computations": len(comps),
+    }
+
+
+def top_contributors(text: str, k: int = 15, metric: str = "hbm",
+                     f32_as_bf16: bool = True) -> list:
+    """Debug helper: the k instructions contributing most (metric x trip
+    multiplier) — 'hbm' | 'flops' | 'coll'."""
+    global _F32_AS_BF16
+    _F32_AS_BF16 = f32_as_bf16
+    comps, entry = parse_module(text)
+    multipliers: dict[str, float] = defaultdict(float)
+    fusion_callees: set[str] = set()
+    stack: set[str] = set()
+
+    def visit(name, m):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        stack.add(name)
+        multipliers[name] += m
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = _while_trip(ins, comps)
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                if bm:
+                    visit(bm.group(1), m * trip)
+                if cm:
+                    visit(cm.group(1), m * (trip + 1))
+            elif ins.opcode == "fusion":
+                mm = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                if mm:
+                    fusion_callees.add(mm.group(1))
+                    visit(mm.group(1), m)
+            else:
+                for attr in ("to_apply", "calls"):
+                    mm = re.search(rf"{attr}=%?([\w.\-]+)", ins.rhs)
+                    if mm:
+                        visit(mm.group(1), m)
+        stack.discard(name)
+
+    visit(entry, 1.0)
+    rows = []
+    for name, comp in comps.items():
+        mult = multipliers.get(name, 0.0)
+        if not mult:
+            continue
+        in_fusion = name in fusion_callees
+        for ins in comp.instrs:
+            op = ins.opcode
+            val = 0.0
+            if metric == "flops":
+                val = _dot_flops(ins, comp.symtab)
+            elif metric == "coll":
+                base = op[:-6] if op.endswith("-start") else op
+                if base in _COLLECTIVES:
+                    val = _shape_bytes_str(ins.result_head)
+            else:
+                if in_fusion or not op or op in _SKIP_BYTES_OPS:
+                    continue
+                if f32_as_bf16 and op == "convert":
+                    continue
+                if op in ("dynamic-slice", "slice", "gather"):
+                    val = 2 * _shape_bytes_str(ins.result_head)
+                elif op in ("dynamic-update-slice", "scatter"):
+                    ops_ = re.findall(r"%([\w.\-]+)",
+                                      _operand_region(ins.rhs))
+                    upd = comp.symtab.get(ops_[1], "") if len(ops_) > 1 else ""
+                    val = 2 * _shape_bytes_str(upd)
+                elif op == "fusion":
+                    m_ = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                    callee = comps.get(m_.group(1)) if m_ else None
+                    if f32_as_bf16 and callee is not None and \
+                            _is_pure_convert(callee):
+                        continue
+                    val = (_fusion_bytes(ins, comp.symtab, callee)
+                           if callee else 0)
+                else:
+                    val = (_shape_bytes_str(ins.result_head) +
+                           _operand_bytes(ins, comp.symtab))
+            if val:
+                rows.append((val * mult, mult, f"{name}/{ins.name}",
+                             ins.rhs[:160]))
+    rows.sort(reverse=True)
+    return rows[:k]

@@ -1,0 +1,133 @@
+"""Roofline analysis from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the target
+TPU v5e.  The compiled module after SPMD partitioning is the *per-chip*
+program, so all quantities below are per chip:
+
+    t_compute    = flops_per_chip      / PEAK_FLOPS
+    t_memory     = hbm_bytes_per_chip  / HBM_BW
+    t_collective = link_bytes_per_chip / ICI_BW
+
+FLOPs / bytes / collective-bytes come from ``repro.perf.hlo_analysis`` — a
+static analysis of ``compiled.as_text()`` that multiplies ``lax.scan`` while
+bodies by their trip counts (XLA's own ``cost_analysis()`` visits each
+instruction once and under-reports scanned layers; we record it alongside for
+reference).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.perf.hlo_analysis import analyze_hlo
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-chip FLOPs per step (scan-adjusted)
+    hbm_bytes: float           # per-chip HBM traffic per step
+    coll_bytes: float          # per-chip collective link bytes per step
+    chips: int
+    model_flops: float = 0.0   # analytic useful FLOPs (global)
+    coll_detail: Optional[dict] = None
+    xla_cost: Optional[dict] = None
+    memory_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """(model_flops/chips) / hlo_flops_per_chip — how much of the compiled
+        compute is useful; <1 means remat/replication/dispatch waste."""
+        if not self.flops:
+            return 0.0
+        return (self.model_flops / self.chips) / self.flops
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops, "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes, "chips": self.chips,
+            "model_flops_global": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "memory_per_chip": self.memory_per_chip,
+            "coll_detail": self.coll_detail,
+            "xla_cost": self.xla_cost,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs per step: 6*N*D train, 2*N*D inference
+    (N = active params, D = tokens processed)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(compiled, cfg, shape, chips: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    h = analyze_hlo(text)
+
+    cost = {}
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, list):
+            c = c[0]
+        cost = {"flops": float(c.get("flops", 0.0)),
+                "bytes_accessed": float(c.get("bytes accessed", 0.0))}
+    except Exception:
+        pass
+
+    mem = compiled.memory_analysis()
+    per_chip = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        per_chip += getattr(mem, attr, 0) or 0
+    per_chip -= getattr(mem, "alias_size_in_bytes", 0) or 0
+
+    return Roofline(
+        flops=h["flops"], hbm_bytes=h["hbm_bytes"],
+        coll_bytes=h["total_coll_bytes"], chips=chips,
+        model_flops=model_flops(cfg, shape),
+        coll_detail={"bytes": h["coll_bytes"], "count": h["coll_count"]},
+        xla_cost=cost, memory_per_chip=per_chip)
+
+
+def save_json(path: str, record: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)

@@ -1,0 +1,165 @@
+"""Serving engine: closed-loop request processing under a controller.
+
+The engine owns the executor, the tail-latency window, instance lifecycle
+costs (launching/terminating co-located instances stalls the service — the
+very overhead that motivates the paper's matrix-completion jump), and the
+metrics accumulator.  Controllers (repro.core) expose:
+
+    action()              -> Action(bs, mtl)
+    observe(p95, result)  -> None        (called after every step)
+
+Dynamic batch-size changes are free (the paper's dynamic batch sizing);
+MTL changes cost `instance_launch_s` per added and `instance_kill_s` per
+removed instance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.serving.metrics import RunAccumulator, TailLatencyWindow
+
+
+@dataclasses.dataclass
+class Action:
+    bs: int = 1
+    mtl: int = 1
+
+
+class ServingEngine:
+    def __init__(self, executor, slo_s: float, *,
+                 window: int = 200,
+                 instance_launch_s: float = 2.0,
+                 instance_kill_s: float = 0.3,
+                 slo_schedule: Optional[Callable[[float], float]] = None):
+        self.executor = executor
+        self.base_slo = slo_s
+        self.window = TailLatencyWindow(window=window)
+        self.acc = RunAccumulator()
+        self.instance_launch_s = instance_launch_s
+        self.instance_kill_s = instance_kill_s
+        self.slo_schedule = slo_schedule
+        self.reconfig_time = 0.0
+
+    def current_slo(self) -> float:
+        if self.slo_schedule is not None:
+            return self.slo_schedule(self.acc.total_time)
+        return self.base_slo
+
+    def run(self, controller, *, max_steps: int = 2000,
+            sim_time_limit: Optional[float] = None) -> RunAccumulator:
+        prev = Action(bs=1, mtl=1)
+        for _ in range(max_steps):
+            slo = self.current_slo()
+            if hasattr(controller, "set_slo"):
+                controller.set_slo(slo)
+            act = controller.action()
+
+            # instance lifecycle cost
+            if act.mtl != prev.mtl:
+                delta = act.mtl - prev.mtl
+                cost = (self.instance_launch_s * max(delta, 0) +
+                        self.instance_kill_s * max(-delta, 0))
+                self.acc.total_time += cost
+                self.reconfig_time += cost
+                self.window.reset()
+            elif act.bs != prev.bs:
+                # dynamic batch sizing is free, but the tail window must be
+                # measured fresh at the new BS (the paper "processes a certain
+                # number of batches and measures their tail latency" per BS)
+                self.window.reset()
+
+            res = self.executor.run_step(act.bs, act.mtl)
+            self.window.add_many(res["request_latencies"])
+            self.acc.record_step(
+                items=res["items"], step_time=res["step_time"],
+                power_w=res["power_w"],
+                request_latencies=res["request_latencies"], slo=slo)
+            self.acc.trace.append(
+                (self.acc.total_time, act.bs, act.mtl, self.window.p95,
+                 res["throughput"], slo))
+            controller.observe(self.window.p95, res)
+            prev = act
+            if sim_time_limit and self.acc.total_time >= sim_time_limit:
+                break
+        return self.acc
+
+
+class OpenLoopEngine(ServingEngine):
+    """Open-loop serving: requests arrive via a (bursty) Poisson process and
+    queue; per-request latency = queueing wait + batch service time.  This is
+    the regime of the paper's §3.2 note that "some inference workloads arrive
+    in a burst and not uniformly" — controllers must absorb bursts without
+    violating the SLO for long.
+    """
+
+    def __init__(self, executor, slo_s: float, *, arrival_rate: float,
+                 burst_factor: float = 1.0, burst_period_s: float = 30.0,
+                 seed: int = 0, **kw):
+        super().__init__(executor, slo_s, **kw)
+        self.arrival_rate = arrival_rate
+        self.burst_factor = burst_factor
+        self.burst_period_s = burst_period_s
+        import numpy as _np
+        self._rng = _np.random.default_rng(seed)
+        self.queue: list = []          # arrival timestamps
+        self.dropped = 0
+        self.max_queue = 100_000
+
+    def _rate(self, t: float) -> float:
+        if self.burst_factor <= 1.0:
+            return self.arrival_rate
+        phase = (t % self.burst_period_s) / self.burst_period_s
+        return self.arrival_rate * (self.burst_factor if phase < 0.3 else 1.0)
+
+    def run(self, controller, *, max_steps: int = 2000,
+            sim_time_limit=None) -> RunAccumulator:
+        import numpy as np
+        prev = Action(bs=1, mtl=1)
+        for _ in range(max_steps):
+            slo = self.current_slo()
+            if hasattr(controller, "set_slo"):
+                controller.set_slo(slo)
+            act = controller.action()
+            if act.mtl != prev.mtl:
+                delta = act.mtl - prev.mtl
+                cost = (self.instance_launch_s * max(delta, 0) +
+                        self.instance_kill_s * max(-delta, 0))
+                self.acc.total_time += cost
+                self.reconfig_time += cost
+                self.window.reset()
+            elif act.bs != prev.bs:
+                self.window.reset()
+
+            res = self.executor.run_step(act.bs, act.mtl)
+            t0 = self.acc.total_time
+            t1 = t0 + res["step_time"]
+            # arrivals during this step
+            n_arr = int(self._rng.poisson(self._rate(t0) * res["step_time"]))
+            self.queue.extend(
+                np.sort(t0 + self._rng.random(n_arr) * res["step_time"])
+                if n_arr else [])
+            if len(self.queue) > self.max_queue:
+                self.dropped += len(self.queue) - self.max_queue
+                self.queue = self.queue[-self.max_queue:]
+            capacity = act.bs * act.mtl
+            served_ts, self.queue = self.queue[:capacity], self.queue[capacity:]
+            lats = [t1 - ts for ts in served_ts]
+            self.acc.record_step(
+                items=len(served_ts), step_time=res["step_time"],
+                power_w=res["power_w"], request_latencies=lats, slo=slo)
+            # The controller observes SERVICE latency (as in the paper's
+            # closed-loop measurement): feeding it queue-inclusive latency
+            # would make the batch scaler shrink the batch exactly when the
+            # backlog demands growing it (a death spiral).  End-to-end
+            # (queue + service) latencies still go to the accumulator above.
+            self.window.add_many(res["request_latencies"])
+            self.acc.trace.append(
+                (t1, act.bs, act.mtl, self.window.p95,
+                 len(served_ts) / res["step_time"], slo))
+            controller.observe(self.window.p95, res)
+            prev = act
+            if sim_time_limit and self.acc.total_time >= sim_time_limit:
+                break
+        return self.acc

@@ -1,0 +1,116 @@
+"""Executors: where (simulated or real) inference time comes from.
+
+SimExecutor — analytical device model (device_model.py) + latency noise;
+  prices (BS, MTL) for a JobProfile on a Device or a TPU submesh plan.
+
+RealExecutor — actually runs a jitted model on this host and measures wall
+  clock.  Multi-tenancy is emulated by stacking MTL independent instance
+  batches on a leading axis (vmap), which shares the host compute the way
+  co-located GPU contexts share SMs.  Used for reduced models in tests,
+  examples, and the real-execution benchmarks.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import device_model as dm
+from repro.serving import tenancy
+
+
+class SimExecutor:
+    """Closed-loop simulated executor for one job."""
+
+    def __init__(self, profile: dm.JobProfile, device: dm.Device = dm.TESLA_P40,
+                 seed: int = 0, mesh_shape: Optional[tuple] = None):
+        self.profile = profile
+        self.device = device
+        self.sampler = dm.LatencySampler(seed=seed)
+        self.mesh_shape = mesh_shape   # TPU mode: tenancy = submesh split
+        self.clock = 0.0
+
+    # -- pricing ------------------------------------------------------------
+    def mean_latency(self, bs: int, mtl: int) -> float:
+        if self.mesh_shape is not None:
+            p = tenancy.plan(self.mesh_shape, mtl)
+            if p is None:
+                return float("inf")
+            return dm.step_latency(self.device, self.profile, bs,
+                                   share=p.share)["t_step"]
+        return dm.mt_latency(self.device, self.profile, bs, mtl)
+
+    def fits(self, bs: int, mtl: int) -> bool:
+        return dm.fits_memory(self.device, self.profile, bs, mtl)
+
+    # -- execution ----------------------------------------------------------
+    def run_step(self, bs: int, mtl: int) -> dict:
+        """Simulate one synchronized step of all MTL instances."""
+        mean = self.mean_latency(bs, mtl)
+        lat = float(self.sampler.sample(mean, n=1)[0])
+        self.clock += lat
+        items = bs * mtl
+        return {
+            "step_time": lat,
+            "items": items,
+            "request_latencies": self.sampler.sample(lat, n=min(items, 64)),
+            "power_w": dm.power(self.device, self.profile, bs, mtl),
+            "throughput": items / lat,
+        }
+
+
+class RealExecutor:
+    """Wall-clock executor over a jitted callable.
+
+    `fn(params, batch)` consumes a batch pytree whose leaves have leading
+    dim = instances*bs (instances folded in by the caller via make_batch)."""
+
+    def __init__(self, fn: Callable, params, make_batch: Callable,
+                 idle_w: float = 50.0, peak_w: float = 250.0):
+        self.fn = fn
+        self.params = params
+        self.make_batch = make_batch
+        self.idle_w = idle_w
+        self.peak_w = peak_w
+        self._compiled: dict = {}
+        self.clock = 0.0
+
+    def _get(self, bs: int, mtl: int):
+        key = (bs, mtl)
+        if key not in self._compiled:
+            batch = self.make_batch(bs * mtl)
+            out = self.fn(self.params, batch)   # trigger compile
+            jax.block_until_ready(out)
+            self._compiled[key] = batch
+        return self._compiled[key]
+
+    def mean_latency(self, bs: int, mtl: int, iters: int = 3) -> float:
+        batch = self._get(bs, mtl)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = self.fn(self.params, batch)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    def fits(self, bs: int, mtl: int) -> bool:
+        return bs * mtl <= 4096
+
+    def run_step(self, bs: int, mtl: int) -> dict:
+        batch = self._get(bs, mtl)
+        t0 = time.perf_counter()
+        out = self.fn(self.params, batch)
+        jax.block_until_ready(out)
+        lat = time.perf_counter() - t0
+        self.clock += lat
+        items = bs * mtl
+        return {
+            "step_time": lat,
+            "items": items,
+            "request_latencies": np.full(min(items, 64), lat),
+            "power_w": self.peak_w * 0.6,
+            "throughput": items / lat,
+        }

@@ -1,0 +1,94 @@
+"""Serving metrics: sliding-window tail latency, throughput, power/energy."""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+class TailLatencyWindow:
+    """p95 (the paper's SLO metric) over the most recent N request latencies."""
+
+    def __init__(self, window: int = 200, quantile: float = 0.95):
+        self.window = window
+        self.quantile = quantile
+        self.buf: deque = deque(maxlen=window)
+
+    def add(self, latency_s: float, count: int = 1) -> None:
+        for _ in range(count):
+            self.buf.append(latency_s)
+
+    def add_many(self, latencies) -> None:
+        self.buf.extend(latencies)
+
+    @property
+    def p95(self) -> float:
+        if not self.buf:
+            return 0.0
+        return float(np.quantile(np.asarray(self.buf), self.quantile))
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.buf)) if self.buf else 0.0
+
+    def reset(self) -> None:
+        self.buf.clear()
+
+
+class RunAccumulator:
+    """Aggregates a serving run: throughput, SLO attainment, energy."""
+
+    def __init__(self):
+        self.total_items = 0
+        self.total_time = 0.0
+        self.energy_j = 0.0
+        self.latencies: list = []
+        self.trace: list = []          # (t, bs_or_mtl, p95, throughput)
+        self.violations = 0
+        self.requests = 0
+
+    def record_step(self, *, items: int, step_time: float, power_w: float,
+                    request_latencies, slo: float) -> None:
+        self.total_items += items
+        self.total_time += step_time
+        self.energy_j += power_w * step_time
+        lat = list(request_latencies)
+        self.latencies.extend(lat)
+        self.requests += len(lat)
+        self.violations += sum(1 for x in lat if x > slo)
+
+    @property
+    def throughput(self) -> float:
+        return self.total_items / self.total_time if self.total_time else 0.0
+
+    @property
+    def avg_power(self) -> float:
+        return self.energy_j / self.total_time if self.total_time else 0.0
+
+    @property
+    def power_efficiency(self) -> float:
+        return self.throughput / self.avg_power if self.avg_power else 0.0
+
+    @property
+    def p95(self) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies), 0.95))
+
+    @property
+    def slo_attainment(self) -> float:
+        if not self.requests:
+            return 1.0
+        return 1.0 - self.violations / self.requests
+
+    def summary(self) -> dict:
+        return {
+            "throughput": self.throughput,
+            "p95_s": self.p95,
+            "avg_power_w": self.avg_power,
+            "power_efficiency": self.power_efficiency,
+            "slo_attainment": self.slo_attainment,
+            "items": self.total_items,
+            "sim_time_s": self.total_time,
+        }

@@ -1,0 +1,74 @@
+"""Workloads: the paper's 30-job table (Table 4) plus LLM serving jobs built
+from the assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving import device_model as dm
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    job_id: int
+    dnn: str
+    dataset: str
+    slo_ms: float
+    paper_method: Optional[str] = None   # what the paper's Table 4 chose
+    paper_steady: Optional[int] = None   # steady BS or MTL in Table 4
+
+    @property
+    def slo_s(self) -> float:
+        return self.slo_ms / 1e3
+
+    def profile(self) -> dm.JobProfile:
+        return dm.paper_profile(self.dnn, self.dataset)
+
+
+# Paper Table 4 — job #, DNN, dataset, SLO(ms), DNNScaler method, steady knob.
+PAPER_JOBS = [
+    Job(1,  "inception_v1",    "imagenet",     35,   "MT", 8),
+    Job(2,  "inception_v2",    "imagenet",     53,   "MT", 9),
+    Job(3,  "inception_v4",    "imagenet",     419,  "B",  28),
+    Job(4,  "mobilenet_v1_05", "imagenet",     199,  "MT", 10),
+    Job(5,  "mobilenet_v1_025", "imagenet",    186,  "MT", 10),
+    Job(6,  "mobilenet_v2_1",  "imagenet",     81,   "MT", 10),
+    Job(7,  "nasnet_large",    "imagenet",     417,  "B",  13),
+    Job(8,  "nasnet_mobile",   "imagenet",     85,   "MT", 10),
+    Job(9,  "pnasnet_mobile",  "imagenet",     82,   "MT", 10),
+    Job(10, "resnet_v2_50",    "imagenet",     45,   "MT", 6),
+    Job(11, "resnet_v2_101",   "imagenet",     72,   "B",  4),
+    Job(12, "resnet_v2_152",   "imagenet",     206,  "B",  14),
+    Job(13, "resnet_v2_101",   "imagenet",     107,  "B",  7),
+    Job(14, "inception_v1",    "caltech",      48,   "MT", 10),
+    Job(15, "inception_v2",    "caltech",      116,  "B",  16),
+    Job(16, "inception_v3",    "caltech",      322,  "B",  37),
+    Job(17, "inception_v4",    "caltech",      139,  "B",  10),
+    Job(18, "mobilenet_v1_1",  "caltech",      89,   "MT", 10),
+    Job(19, "mobilenet_v1_05", "caltech",      60,   "MT", 10),
+    Job(20, "mobilenet_v1_025", "caltech",     104,  "MT", 10),
+    Job(21, "mobilenet_v2_1",  "caltech",      129,  "MT", 10),
+    Job(22, "pnasnet_large",   "caltech",      524,  "B",  19),
+    Job(23, "pnasnet_mobile",  "caltech",      321,  "B",  50),
+    Job(24, "resnet_v2_50",    "caltech",      31,   "B",  1),
+    Job(25, "resnet_v2_101",   "caltech",      107,  "B",  10),
+    Job(26, "textclassif",     "sentiment140", 3.5,  "B",  102),
+    Job(27, "textclassif",     "imdb",         3,    "B",  76),
+    Job(28, "deepspeech2",     "librispeech",  1250, "B",  28),
+    Job(29, "deepvs",          "ledov",        3000, "MT", 6),
+    Job(30, "deepvs",          "dhf1k",        5000, "MT", 8),
+]
+
+
+def llm_jobs(slo_scale: float = 4.0):
+    """LLM serving jobs from the assigned architectures (decode mode)."""
+    from repro.configs.base import ARCH_IDS, get_config
+    from repro.serving.device_model import TPU_V5E, llm_profile, step_latency
+    jobs = []
+    for i, arch in enumerate(ARCH_IDS):
+        cfg = get_config(arch)
+        prof = llm_profile(cfg, mode="decode")
+        base = step_latency(TPU_V5E, prof, 1)["t_step"]
+        jobs.append((arch, prof, base * slo_scale))
+    return jobs

@@ -1,0 +1,53 @@
+"""Flat-npz checkpointing for param/optimizer pytrees (no external deps)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    # npz can't store bfloat16 (numpy sees a void dtype) — upcast losslessly
+    if arr.dtype.name == "bfloat16":
+        return arr.astype(np.float32)
+    return arr
+
+
+def save(path: str, step: int, params: Any, opt_state: Any = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": _to_savable(v) for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": _to_savable(v)
+                        for k, v in _flatten(opt_state).items()})
+    payload["__step__"] = np.asarray(step)
+    np.savez(path, **payload)
+
+
+def load(path: str, params_template: Any, opt_template: Any = None):
+    """Restores into the structure (and dtypes) of the given templates."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    step = int(data["__step__"])
+
+    def restore(tree, prefix):
+        flat_named = list(_flatten(tree).keys())
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        assert len(flat_named) == len(leaves)
+        new = [jax.numpy.asarray(data[f"{prefix}/{k}"]).astype(leaf.dtype)
+               for k, leaf in zip(flat_named, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, new)
+
+    params = restore(params_template, "params")
+    opt = restore(opt_template, "opt") if opt_template is not None else None
+    return step, params, opt

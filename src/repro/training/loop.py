@@ -1,0 +1,62 @@
+"""Host-mesh training loop (runs for real on this machine's devices)."""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import api
+from repro.training import adamw, checkpoint
+from repro.training.data import DataConfig, TokenStream
+
+
+def train(cfg: ModelConfig, *, steps: int = 100, batch_size: int = 8,
+          seq_len: int = 256, lr: float = 3e-4, seed: int = 0,
+          log_every: int = 10, ckpt_path: Optional[str] = None,
+          ckpt_every: int = 0, data_path: Optional[str] = None,
+          remat: bool = False) -> dict:
+    """Single-host training; returns the loss trace."""
+    rng = jax.random.PRNGKey(seed)
+    params = api.init_params(rng, cfg)
+    opt = adamw.init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+
+    stream = iter(TokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, batch_size=batch_size,
+        seed=seed, path=data_path)))
+
+    @jax.jit
+    def step_fn(params, opt, tokens):
+        def loss_fn(p):
+            loss, metrics = api.train_loss(p, {"tokens": tokens}, cfg,
+                                           remat=remat)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, gnorm = adamw.update(grads, opt, params, lr=lr)
+        return params, opt, loss, gnorm
+
+    losses, times = [], []
+    t_start = time.perf_counter()
+    for i in range(steps):
+        tokens = jnp.asarray(next(stream))
+        t0 = time.perf_counter()
+        params, opt, loss, gnorm = step_fn(params, opt, tokens)
+        loss = float(loss)
+        times.append(time.perf_counter() - t0)
+        losses.append(loss)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            tok_s = batch_size * seq_len / np.mean(times[-log_every:])
+            print(f"step {i:>5d}  loss {loss:7.4f}  gnorm {float(gnorm):6.2f} "
+                  f" tok/s {tok_s:9.0f}")
+        if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_path, i + 1, params, opt)
+    wall = time.perf_counter() - t_start
+    if ckpt_path:
+        checkpoint.save(ckpt_path, steps, params, opt)
+    return {"losses": losses, "wall_s": wall, "n_params": n_params,
+            "final_loss": losses[-1], "params": params}

@@ -1,0 +1,138 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32) * 0.5
+    return x.astype(dtype)
+
+
+FLASH_CASES = [
+    # (B, Tq, Tk, H, KV, hd, causal, window, cap)
+    (2, 256, 256, 8, 2, 64, True, None, None),
+    (1, 128, 128, 4, 4, 32, True, 64, None),
+    (2, 200, 200, 6, 2, 64, True, None, 50.0),     # padding path
+    (1, 256, 256, 8, 1, 128, True, 100, 30.0),     # MQA + window + cap
+    (1, 96, 96, 8, 8, 32, False, None, None),      # bidirectional (encoder)
+    (3, 384, 384, 15, 5, 64, True, None, None),    # smollm-like heads
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Tq, Tk, H, KV, hd, causal, window, cap = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Tq, H, hd), dtype)
+    k = _rand(ks[1], (B, Tk, KV, hd), dtype)
+    v = _rand(ks[2], (B, Tk, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, logit_cap=cap)
+    ref = attention_ref(q, k, v, causal=causal, window=window, logit_cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+DECODE_CASES = [
+    (2, 512, 8, 2, 64, 300, None, None),
+    (1, 512, 4, 1, 128, 511, 128, None),
+    (3, 300, 6, 6, 32, 150, None, 50.0),
+    (2, 1024, 48, 1, 64, 700, None, None),        # granite-like MQA
+    (1, 256, 32, 4, 128, 0, None, None),          # first token
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype):
+    B, S, H, KV, hd, pos, window, cap = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, H, hd), dtype)
+    k = _rand(ks[1], (B, S, KV, hd), dtype)
+    v = _rand(ks[2], (B, S, KV, hd), dtype)
+    p = jnp.asarray(pos, jnp.int32)
+    out = decode_attention(q, k, v, p, window=window, logit_cap=cap)
+    ref = decode_attention_ref(q, k, v, p, window=window, logit_cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+SSD_CASES = [
+    (2, 256, 4, 64, 32, 64),
+    (1, 128, 8, 32, 16, 128),
+    (2, 512, 2, 64, 64, 128),
+    (1, 256, 64, 64, 128, 64),                    # mamba2-1.3b-like head count
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=str)
+def test_ssd_scan_matches_naive_recurrence(case):
+    B, T, H, P, N, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, T, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, T, N)) * 0.5
+    y, st = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_scan_respects_initial_state():
+    B, T, H, P, N = 1, 128, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, T, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, T, N)) * 0.5
+    # split the sequence: full pass == two half passes chaining state
+    from repro.models.mamba import ssd_chunked
+    y_full, s_full = ssd_chunked(x, dt, A, Bm, Cm, 64)
+    h = T // 2
+    y1, s1 = ssd_chunked(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], 64)
+    y2, s2 = ssd_chunked(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:], 64,
+                         init_state=s1)
+    np.testing.assert_allclose(np.asarray(y_full[:, h:]), np.asarray(y2),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_attention_gradients_match_ref():
+    B, T, H, KV, hd = 2, 160, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (B, T, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, KV, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, KV, hd)) * 0.5
+    w = jax.random.normal(ks[3], (B, T, H, hd))
+    from repro.models.layers import flash_attention as model_flash
+
+    def f1(q, k, v):
+        return jnp.sum(model_flash(q, k, v, causal=True, window=48,
+                                   logit_cap=30.0, block_q=64, block_k=64) * w)
+
+    def f2(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True, window=48,
+                                     logit_cap=30.0) * w)
+
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4)

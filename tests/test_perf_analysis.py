@@ -1,0 +1,122 @@
+"""Tests for the HLO static analyzer (trip-count-aware roofline terms)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.perf.hlo_analysis import analyze_hlo, parse_module
+from repro.perf.roofline import Roofline
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    n_layers, d = 7, 64
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    text = _compile_text(f, jax.ShapeDtypeStruct((n_layers, d, d), jnp.float32),
+                         jax.ShapeDtypeStruct((4, d), jnp.float32))
+    r = analyze_hlo(text)
+    expect = 2 * 4 * d * d * n_layers
+    assert r["flops"] == pytest.approx(expect, rel=0.01)
+
+
+def test_unrolled_matches_scanned_flops():
+    d = 32
+
+    def scanned(w, x):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    def unrolled(w, x):
+        for i in range(5):
+            x = x @ w[i]
+        return x.sum()
+
+    t1 = _compile_text(scanned, jax.ShapeDtypeStruct((5, d, d), jnp.float32),
+                       jax.ShapeDtypeStruct((4, d), jnp.float32))
+    t2 = _compile_text(unrolled, jax.ShapeDtypeStruct((5, d, d), jnp.float32),
+                       jax.ShapeDtypeStruct((4, d), jnp.float32))
+    r1, r2 = analyze_hlo(t1), analyze_hlo(t2)
+    assert r1["flops"] == pytest.approx(r2["flops"], rel=0.01)
+
+
+def test_dynamic_slice_counts_slice_not_buffer():
+    big = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)  # 4 MB
+
+    def f(buf, i):
+        s = jax.lax.dynamic_slice(buf, (i, 0), (8, 1024))  # 32 KB slice
+        return s.sum()
+
+    text = _compile_text(f, big, jax.ShapeDtypeStruct((), jnp.int32))
+    r = analyze_hlo(text)
+    assert r["hbm_bytes"] < 1e6  # far below the 4 MB buffer
+
+
+def test_collective_parse_on_synthetic_hlo():
+    text = """
+HloModule m
+
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %ag = f32[8,512]{1,0} all-gather(%p0), replica_groups={}, dimensions={1}
+  %slice.1 = f32[8,128]{1,0} slice(%ag), slice={[0:8],[0:128]}
+  ROOT %ar = f32[8,128]{1,0} all-reduce(%slice.1), to_apply=%add
+}
+"""
+    r = analyze_hlo(text, f32_as_bf16=False)
+    assert r["coll_count"]["all-gather"] == 1
+    assert r["coll_count"]["all-reduce"] == 1
+    assert r["coll_bytes"]["all-gather"] == pytest.approx(8 * 512 * 4)
+    assert r["coll_bytes"]["all-reduce"] == pytest.approx(2 * 8 * 128 * 4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 64), st.integers(4, 64), st.integers(4, 64))
+def test_dot_flops_formula(m, n, k):
+    def f(a, b):
+        return a @ b
+
+    text = _compile_text(f, jax.ShapeDtypeStruct((m, k), jnp.float32),
+                         jax.ShapeDtypeStruct((k, n), jnp.float32))
+    r = analyze_hlo(text)
+    assert r["flops"] == pytest.approx(2 * m * n * k, rel=0.01)
+
+
+def test_roofline_terms_and_dominance():
+    rl = Roofline(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=0, chips=256,
+                  model_flops=197e12 * 256 * 0.5)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(2.0)
+    assert rl.dominant == "memory"
+    assert rl.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_parse_module_entry_detection():
+    text = """
+HloModule m
+
+%helper (a: f32[2]) -> f32[2] {
+  %a = f32[2]{0} parameter(0)
+  ROOT %t = f32[2]{0} tanh(%a)
+}
+
+ENTRY %main (p: f32[2]) -> f32[2] {
+  %p = f32[2]{0} parameter(0)
+  ROOT %c = f32[2]{0} call(%p), to_apply=%helper
+}
+"""
+    comps, entry = parse_module(text)
+    assert entry == "main"
+    assert set(comps) == {"helper", "main"}
