@@ -317,6 +317,43 @@ def bench_matrix_completion_ablation():
     return rows
 
 
+def bench_cluster():
+    """Beyond-paper: the multi-job cluster scenario — a 12-job slice of the
+    Table-4 trace on a 5-device fleet under every controller policy, plus
+    the full 30-job/12-device aggregate for {paper, hybrid} (short horizon;
+    examples/cluster_serve.py runs the converged 300 s version)."""
+    from repro.serving.cluster import gpu_fleet, run_paper_cluster
+    rows = []
+    jobs = PAPER_JOBS[:12]
+    fleet = gpu_fleet(5)
+    thr = {}
+    for mode in ("auto", "hybrid", "B", "MT", "clipper"):
+        rep = run_paper_cluster(mode, jobs=jobs, fleet=fleet,
+                                sim_time_limit=90.0)
+        a = rep["aggregate"]
+        thr[mode] = a["aggregate_throughput"]
+        rows.append((f"cluster/slice12/{mode}", 0.0,
+                     f"thr={a['aggregate_throughput']:.1f}/s,"
+                     f"meet_slo={a['jobs_meeting_slo']}/{a['feasible_jobs']},"
+                     f"stall={a['total_stall_s']:.1f}s"))
+    best_pure = max(thr["auto"], thr["B"], thr["MT"])
+    rows.append(("cluster/slice12/hybrid_vs_best_pure", 0.0,
+                 f"x{thr['hybrid'] / max(best_pure, 1e-9):.2f}"))
+    full = {}
+    for mode in ("auto", "hybrid"):
+        rep = run_paper_cluster(mode, n_devices=12, sim_time_limit=90.0,
+                                seed=2)
+        a = rep["aggregate"]
+        full[mode] = a["aggregate_throughput"]
+        rows.append((f"cluster/full30/{mode}", 0.0,
+                     f"thr={a['aggregate_throughput']:.1f}/s,"
+                     f"meet_slo={a['jobs_meeting_slo']}/{a['feasible_jobs']},"
+                     f"stall={a['total_stall_s']:.1f}s"))
+    rows.append(("cluster/full30/hybrid_vs_paper", 0.0,
+                 f"x{full['hybrid'] / max(full['auto'], 1e-9):.2f}"))
+    return rows
+
+
 def bench_matcomp_nonlinear():
     """Where matrix completion beats interpolation: latency curves with a
     saturation knee (the regime of real GPU co-location — latency is flat

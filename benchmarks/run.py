@@ -11,6 +11,7 @@ Suites (one per paper table/figure — DESIGN.md §8):
   fig11         sole-MT check on B jobs
   fig12         B+MT combination
   llm           DNNScaler on the assigned architectures (TPU model)
+  cluster       multi-job cluster serving: paper vs hybrid vs pure knobs
   burst         open-loop bursty arrivals: DNNScaler vs static (beyond paper)
   alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
   matcomp       ablation: matrix completion vs naive interpolation
@@ -38,6 +39,7 @@ def suites():
         "fig11": paper_benches.bench_fig11_sole_mt,
         "fig12": paper_benches.bench_fig12_combination,
         "llm": paper_benches.bench_llm_serving,
+        "cluster": paper_benches.bench_cluster,
         "burst": paper_benches.bench_burst,
         "alpha": paper_benches.bench_alpha_ablation,
         "matcomp": paper_benches.bench_matrix_completion_ablation,

@@ -6,6 +6,12 @@ DNNScalerController drives the serving engine for one job:
   2. The matching Scaler maintains p95 <= SLO while maximizing throughput
      (binary search on BS, or matrix-completion + AIMD on MTL).
 
+`mode` selects the approach policy:
+  "auto"   — the paper's Algorithm 1: profile, then commit to B or MT;
+  "hybrid" — beyond the paper: a HybridScaler jointly tunes (BS, MTL) by
+             coordinate descent, seeded by the matrix-completion estimate;
+  "B"/"MT" — force one pure strategy (the Fig. 11 sole-knob ablations).
+
 StaticController fixes (bs, mtl) — used for the Fig. 1 sweeps and the
 Fig. 11/12 combination studies.
 """
@@ -17,7 +23,7 @@ from typing import Optional
 from repro.core.clipper import ClipperController
 from repro.core.matrix_completion import LatencyEstimator
 from repro.core.profiler import Profiler, ProfileResult
-from repro.core.scaler import ALPHA, BatchScaler, MTScaler
+from repro.core.scaler import ALPHA, BatchScaler, HybridScaler, MTScaler
 from repro.serving.engine import Action
 
 
@@ -27,14 +33,27 @@ class DNNScalerController:
     def __init__(self, executor, slo_s: float, *,
                  estimator: Optional[LatencyEstimator] = None,
                  max_bs: int = 128, max_mtl: int = 10,
-                 m: int = 32, n: int = 8, decision_interval: int = 5):
+                 m: int = 32, n: int = 8, decision_interval: int = 5,
+                 mode: str = "auto"):
+        if mode not in ("auto", "hybrid", "B", "MT"):
+            raise ValueError(f"unknown mode {mode!r}")
         self.slo = slo_s
+        self.mode = mode
         self.max_mtl = max_mtl
         self.estimator = estimator or LatencyEstimator(max_mtl=max_mtl)
         self.profiler = Profiler(executor, m=m, n=n)
         self.profile: ProfileResult = self.profiler.probe()
 
-        if self.profile.approach == "B":
+        picked = self.profile.approach if mode == "auto" else mode
+        if picked == "hybrid":
+            # the profiler's winner is the primary knob; the secondary knob
+            # is grown opportunistically once the primary saturates
+            observed = self.profiler.mt_observations(self.profile)
+            self.scaler = HybridScaler(slo_s, self.estimator, observed,
+                                       primary=self.profile.approach,
+                                       max_bs=max_bs, max_mtl=max_mtl,
+                                       decision_interval=decision_interval)
+        elif picked == "B":
             self.scaler = BatchScaler(slo_s, max_bs=max_bs,
                                       decision_interval=decision_interval)
         else:
@@ -45,7 +64,9 @@ class DNNScalerController:
 
     @property
     def approach(self) -> str:
-        return self.profile.approach
+        if self.mode == "auto":
+            return self.profile.approach
+        return "H" if self.mode == "hybrid" else self.mode
 
     def set_slo(self, slo_s: float) -> None:
         self.slo = slo_s
@@ -76,4 +97,4 @@ class StaticController:
 
 
 __all__ = ["DNNScalerController", "ClipperController", "StaticController",
-           "ALPHA"]
+           "HybridScaler", "ALPHA"]

@@ -1,9 +1,10 @@
-"""Scaler module (paper §3.2.2, Algorithm 1 lines 10-41).
+"""Scaler module (paper §3.2.2, Algorithm 1 lines 10-41) plus a joint knob.
 
 BatchScaler — pseudo binary search over batch size in [1, maxBS] with the
 hysteresis band [alpha*SLO, SLO] (alpha = 0.85); dynamic batch sizing means
 changes are free.  MTScaler — jump to the matrix-completion-estimated MTL,
-then AIMD (+1 under alpha*SLO, -1 over SLO).
+then AIMD (+1 under alpha*SLO, -1 over SLO).  HybridScaler — beyond the
+paper: coordinate descent over the joint (BS, MTL) grid (see its docstring).
 """
 
 from __future__ import annotations
@@ -106,6 +107,7 @@ class MTScaler:
         self.estimator = estimator
         self.observed = dict(observed)
         self.mtl, self.estimate = estimator.pick_mtl(observed, slo_s)  # line 31-32
+        self.mtl = max(1, min(int(self.mtl), max_mtl))
         self.decision_interval = decision_interval
         self._steps = 0
         self.converged_steps = 0
@@ -148,3 +150,329 @@ class MTScaler:
             if self.mtl > 1:
                 self.mtl -= 1
                 self.converged_steps = 0
+
+
+class HybridScaler:
+    """Joint (BS, MTL) scaler — 2-D coordinate descent (beyond the paper).
+
+    The paper's Algorithm 1 commits to ONE knob after profiling, but related
+    work (D-STACK's spatio-temporal multiplexing; the multi-tenant inference
+    survey's hybrid-knob taxonomy) shows the knobs compose: co-located
+    instances each running batched inference can dominate either pure
+    strategy.  HybridScaler searches the joint grid:
+
+      * seed: the profiler's winning axis is the `primary` knob.  "MT"
+        jumps straight to the matrix-completion MTL estimate at BS=1 (like
+        MTScaler, so the expensive instance launches happen once); "B"
+        starts at (1, 1) like BatchScaler;
+      * coordinate descent under the same [alpha*SLO, SLO] hysteresis band.
+        Inside the band nothing moves.  With slack, the primary knob grows
+        first — BS doubles geometrically (free under dynamic batch sizing;
+        doubling, not a midpoint jump, bounds the overshoot of a probe to
+        2x the last feasible point, which matters when the other knob is
+        already high and each step is expensive), MTL climbs +1 (AIMD,
+        costs a launch stall).  Once the primary is saturated, the
+        secondary knob grows the same way;
+      * persistent violations first UNDO a freshly made move exactly, then
+        shrink BS (one notch when the point was long-held — that's noise
+        or a load shift — halving during active search), then shed
+        instances; a gross violation (p95 > spike_guard * SLO) is acted on
+        immediately — at cluster scale a mis-probe can cost whole seconds
+        per step, so waiting out the paper's two-decision spike filter is
+        itself expensive.  `infeasible` is only reachable at (BS=1, MTL=1);
+      * the 1-D known-bad damping generalizes to a dict of pinned (BS, MTL)
+        points with a decision-count amnesty window — a pinned point is
+        never re-probed before the window expires.  Unlike 1-D (where the
+        hysteresis band leaves a converged scaler with nowhere to probe),
+        a 2-D search converged BELOW the band always has an orthogonal
+        direction left, so amnesty alone would re-probe the same bad
+        neighbours forever.  A *probe-target* pin (a deliberate move that
+        failed) struck `persist_pins` times becomes permanent and prunes
+        its whole upper-right quadrant (latency is monotone in both
+        knobs); occupancy pins — the point we were sitting on when noise
+        or load shifted — never persist, or noise alone would eventually
+        ratchet every good point out of the search space;
+      * measurements are judged carefully: after any move the tail window
+        is reset, so p95 readings cool down until the window refills
+        (`min_eval_samples`), and growth in refine mode (once a BS ceiling
+        is known) waits for two consecutive slack readings — near the band
+        edge a single below-band wobble is usually noise, and the probe it
+        would trigger is served at over-SLO latency;
+      * latency slack alone is NOT a go signal in 2-D: host-bound jobs lose
+        throughput as BS grows even while p95 stays under the SLO (the
+        rho(BS) copy-pressure term).  Every growth move is therefore
+        validated against the interval throughput it actually delivered;
+        a move that reduced throughput by more than `revert_tol` is
+        reverted and its target pinned.  MTL probes on the secondary axis
+        must also pass an amortization gate: a launch stall of
+        `mtl_move_cost_s` can never pay off for a job whose whole decision
+        interval serves less than a tenth of that.
+    """
+
+    def __init__(self, slo_s: float, estimator=None, observed: dict = None,
+                 *, primary: str = "B", max_bs: int = 128, max_mtl: int = 10,
+                 alpha: float = ALPHA, decision_interval: int = 5,
+                 amnesty: int = 20, revert_tol: float = 0.05,
+                 spike_guard: float = 1.5, persist_pins: int = 2,
+                 mtl_move_cost_s: float = 2.0, min_eval_samples: int = 60,
+                 safety: float = 0.0):
+        self.slo = slo_s
+        self.alpha = alpha
+        self.primary = primary
+        self.hard_max_bs = max_bs
+        self.max_mtl = max_mtl
+        self.decision_interval = decision_interval
+        self.amnesty = amnesty
+        self.revert_tol = revert_tol
+        self.spike_guard = spike_guard
+        self.persist_pins = persist_pins
+        self.mtl_move_cost_s = mtl_move_cost_s
+        self.min_eval_samples = min_eval_samples
+        # optional margin on the internal latency target ((1-safety)*SLO)
+        # for deployments that want headroom below the hard SLO; off by
+        # default — on the Table-4 trace it shifted search trajectories
+        # more than it bought compliance (measured in the cluster bench)
+        self.safety = safety
+        self.refine_gate = True   # require 2 slack readings in refine mode
+        self.bs = 1
+        self.estimate = None
+        if primary == "MT" and estimator is not None and observed:
+            mtl, self.estimate = estimator.pick_mtl(observed, slo_s)
+            self.mtl = max(1, min(int(mtl), max_mtl))
+        else:
+            self.mtl = 1
+        self.infeasible = False
+        self.converged_steps = 0
+        self._steps = 0
+        self._decisions = 0
+        self._viol_streak = 0
+        self._slack_streak = 0
+        self._known_bad: dict = {}     # (bs, mtl) -> decision index pinned
+        self._dom_counts: dict = {}    # probe-target pins (dominance-safe)
+        self._hi = max_bs              # BS ceiling (violation-tightened)
+        self._pending = None           # ((bs, mtl), thr) state before move
+        self._int_items = 0
+        self._int_time = 0.0
+        self._last_int_time = 0.0      # seconds of serving per decision
+        self._move_decision = -10      # decision index of the last move
+        self._samples_since_move = 10**9
+
+    def set_slo(self, slo_s: float) -> None:
+        if slo_s != self.slo:
+            # re-open the whole 2-D search on SLO change (paper §4.5)
+            self._known_bad.clear()
+            self._dom_counts.clear()
+            self._hi = self.hard_max_bs
+            self._pending = None
+            self.infeasible = False
+        self.slo = slo_s
+
+    def action(self) -> Action:
+        return Action(bs=self.bs, mtl=self.mtl)
+
+    # -- known-bad (2-D, amnesty-windowed) ----------------------------------
+    def is_pinned(self, bs: int, mtl: int) -> bool:
+        # probe-target pins prune by dominance: latency is monotone in both
+        # knobs, so a probe that persistently failed at (b0, m0) rules out
+        # every point in its upper-right quadrant.  Occupancy pins (the
+        # point we were sitting on when load or noise shifted) and fresh
+        # pins block the exact point only — a transient at the steady
+        # point must not condemn the whole search space above it.
+        for (b0, m0), c in self._dom_counts.items():
+            if c >= self.persist_pins and b0 <= bs and m0 <= mtl:
+                return True
+        # occupancy pins (generic shrinks at a held point) deliberately
+        # never become permanent: over a long run, noise alone would strike
+        # every good point twice eventually and ratchet the search into a
+        # corner — only deliberate, post-cooldown probe verdicts persist
+        t = self._known_bad.get((bs, mtl))
+        return t is not None and self._decisions - t < self.amnesty
+
+    def _pin(self, bs: int, mtl: int, dominant: bool = False) -> None:
+        self._known_bad[(bs, mtl)] = self._decisions
+        if dominant:
+            self._dom_counts[(bs, mtl)] = \
+                self._dom_counts.get((bs, mtl), 0) + 1
+
+    def _mark_move(self) -> None:
+        """A knob just changed: the tail window was reset, so its p95 is
+        max-dominated (one 2x OS-jitter spike IS the p95 of a near-empty
+        window) until enough fresh samples land.  Judgments wait."""
+        self._move_decision = self._decisions
+        self._samples_since_move = 0
+
+    # -- growth moves -------------------------------------------------------
+    def _grow_bs(self) -> bool:
+        hi = min(self._hi, self.hard_max_bs)
+        if hi >= self.hard_max_bs:
+            cand = min(self.bs * 2, hi)     # no ceiling known yet: double
+        else:
+            # ceiling known: refine by midpoint (like BatchScaler) so that
+            # re-probes near the band edge overshoot by a notch, not by 2x
+            cand = min(math.ceil((self.bs + hi) / 2), hi)
+        while cand > self.bs and self.is_pinned(cand, self.mtl):
+            cand = self.bs + (cand - self.bs) // 2   # halve the gap, not -1:
+            # a -1 walk would mint a long chain of distinct candidates, each
+            # needing its own pins before the search quiets down
+        if cand <= self.bs:
+            return False
+        self.bs = cand
+        self._mark_move()
+        return True
+
+    def _grow_mtl(self, secondary: bool = False) -> bool:
+        nxt = self.mtl + 1
+        if nxt > self.max_mtl or self.is_pinned(self.bs, nxt):
+            return False
+        if secondary and 0 < self._last_int_time < 0.1 * self.mtl_move_cost_s:
+            # amortization gate: a speculative instance launch stalls the
+            # job for mtl_move_cost_s; for a job whose whole decision
+            # interval serves far less than that, the probe can never pay
+            # for itself (a 2 s stall is ~600 SLOs for the 3.5 ms jobs)
+            return False
+        self.mtl = nxt
+        # `_hi` is kept: latency is monotone in MTL, so a BS ceiling
+        # learned at a lower MTL still bounds the feasible BS here —
+        # resetting it would trigger a full doubling re-climb (and its
+        # chain of gross overshoots) after every failed MTL probe
+        self._mark_move()
+        return True
+
+    def _grow(self, allow_secondary: bool) -> bool:
+        if self.primary == "MT":
+            return self._grow_mtl() or (allow_secondary and self._grow_bs())
+        return self._grow_bs() or (allow_secondary and
+                                   self._grow_mtl(secondary=True))
+
+    def _shrink(self) -> None:
+        """Back off after a persistent/gross violation."""
+        self.converged_steps = 0
+        if self._pending is not None:
+            # the violation is the direct result of the last move: undo it
+            # (and the pin is a probe-target pin — dominance applies)
+            self._pin(self.bs, self.mtl, dominant=True)
+            (pbs, pmtl), _ = self._pending
+            self._pending = None
+            if self.mtl == pmtl and self.bs > pbs:
+                self._hi = self.bs
+            self.bs, self.mtl = pbs, pmtl
+            self._mark_move()
+            return
+        self._pin(self.bs, self.mtl)
+        # a point held for a while that suddenly violates is usually noise
+        # or a load shift grazing the band top — step down one notch; only
+        # a violation during active search warrants the halving descent
+        stable = self._decisions - self._move_decision >= 6
+        if self.bs > 1:
+            self._hi = self.bs
+            cand = self.bs - 1 if stable else max(self.bs // 2, 1)
+            while cand > 1 and self.is_pinned(cand, self.mtl):
+                cand //= 2
+            self.bs = max(cand, 1)
+            self._mark_move()
+        elif self.mtl > 1:
+            self.mtl -= 1
+            # keep `_hi`: it is conservative at the lower MTL (the true
+            # ceiling there is >= the one learned here); the amnesty
+            # relaxation re-opens it gradually if there is room
+            self._mark_move()
+        else:
+            self.infeasible = True
+
+    def observe(self, p95: float, result: Optional[dict] = None) -> None:
+        self._steps += 1
+        if result is not None:
+            self._int_items += result.get("items", 0)
+            self._int_time += result.get("step_time", 0.0)
+            # the tail window receives at most 64 request samples per step
+            self._samples_since_move += min(result.get("items", 64), 64)
+        else:
+            self._samples_since_move += 64   # no telemetry: assume refilled
+        if self._steps % self.decision_interval:
+            return
+        self._decisions += 1
+        thr = self._int_items / self._int_time if self._int_time else None
+        self._last_int_time = self._int_time
+        self._int_items, self._int_time = 0, 0.0
+
+        # post-move cooldown: the window was reset by the move, so p95 is
+        # max-dominated until it refills — freeze judgments (capped at 3
+        # decisions so slow big-batch jobs are not stalled forever)
+        cooling = (self._samples_since_move < self.min_eval_samples
+                   and self._decisions - self._move_decision < 3)
+        slo_t = self.slo * (1.0 - self.safety)   # internal target
+
+        guard = max(2.5, self.spike_guard) if cooling else self.spike_guard
+        if p95 > slo_t * guard:
+            # gross violation: act now, the two-decision spike filter is too
+            # slow when a mis-probe costs seconds of serving per step.
+            # During cooldown the bar is one spiked sample ABOVE what a
+            # healthy point could ever show (spike_mult * band top = 2x).
+            self._viol_streak = 0
+            self._slack_streak = 0
+            self._shrink()
+            return
+        if cooling:
+            return
+
+        if self._pending is not None and p95 <= slo_t:
+            (pbs, pmtl), pthr = self._pending
+            self._pending = None
+            if (thr is not None and pthr is not None
+                    and thr < pthr * (1.0 - self.revert_tol)):
+                # latency-feasible but throughput-negative: revert + pin
+                self._pin(self.bs, self.mtl, dominant=True)
+                if self.mtl == pmtl and self.bs > pbs:
+                    self._hi = self.bs    # larger BS is worse here: cap it
+                self.bs, self.mtl = pbs, pmtl
+                self._mark_move()
+                self.converged_steps = 0
+                return
+
+        if self.converged_steps >= self.amnesty:
+            # long-stable stretch: pins may have been transient spikes —
+            # amnesty re-opens the search (mirrors the 1-D scalers).  The
+            # BS ceiling `_hi` relaxes by roughly one notch (~12%), not to
+            # the hard max: a steady point at the band edge must re-probe
+            # its immediate neighbour, not leap halfway to 2x.
+            self._known_bad.clear()
+            self._hi = min(self.hard_max_bs,
+                           max(self._hi, self.bs + max(1, self.bs // 8)))
+            self.converged_steps = 0
+
+        if self.alpha * slo_t <= p95 <= slo_t:
+            self.converged_steps += 1
+            self._viol_streak = 0
+            self._slack_streak = 0
+            return
+        if p95 < self.alpha * slo_t:
+            self._viol_streak = 0
+            self._slack_streak += 1
+            # any axis needs TWO slack readings once a BS ceiling is known
+            # (refine mode): near the band edge a single wobble below the
+            # band is usually noise, and every probe it triggers is served
+            # at over-SLO latency.  During the initial climb (no ceiling
+            # yet) the primary axis moves on the first reading.
+            gate = (2 if self.refine_gate and self._hi < self.hard_max_bs
+                    else 1)
+            prev = (self.bs, self.mtl)
+            if (self._slack_streak >= gate
+                    and self._grow(allow_secondary=self._slack_streak >= 2)):
+                self._pending = (prev, thr)
+                self.converged_steps = 0
+            else:
+                self.converged_steps += 1
+            return
+        # slo_t < p95 <= spike_guard * slo_t
+        self._slack_streak = 0
+        if self._pending is not None:
+            # the violation follows our own probe: undo it right away —
+            # waiting out the spike filter doubles every probe's cost
+            self._viol_streak = 0
+            self._shrink()
+            return
+        self._viol_streak += 1
+        if self._viol_streak < 2:
+            return                    # skip short-lived spikes (paper §4.4)
+        self._viol_streak = 0
+        self._shrink()

@@ -1,7 +1,10 @@
-"""Generate the EXPERIMENTS.md roofline tables from dry-run JSON artifacts.
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSON artifacts,
+and (optionally) the cluster-serving comparison table from the JSON that
+examples/cluster_serve.py --json dumps.
 
     PYTHONPATH=src python -m repro.launch.report \
-        --baseline experiments/dryrun --final experiments/dryrun_final
+        --baseline experiments/dryrun --final experiments/dryrun_final \
+        --cluster experiments/cluster.json
 """
 
 from __future__ import annotations
@@ -59,6 +62,31 @@ def roofline_table(recs: dict, mesh: str, variant: str) -> str:
     return "\n".join(lines)
 
 
+def cluster_tables(reports: dict) -> str:
+    """Markdown for a multi-policy cluster run ({mode: ClusterEngine report},
+    the structure examples/cluster_serve.py dumps)."""
+    parts = ["| policy | aggregate thr | feasible jobs meeting SLO | "
+             "instance stalls |", "|---|---|---|---|"]
+    for mode, rep in reports.items():
+        a = rep["aggregate"]
+        parts.append(
+            f"| {mode} | {a['aggregate_throughput']:.1f}/s | "
+            f"{a['jobs_meeting_slo']}/{a['feasible_jobs']} | "
+            f"{a['total_stall_s']:.1f}s |")
+    ref = reports.get("auto") or next(iter(reports.values()))
+    cmp_mode = "hybrid" if "hybrid" in reports else None
+    parts.append("\n| job | dnn/dataset | device | approach | bs | mtl | "
+                 "thr/s | tail p95 | SLO |")
+    parts.append("|---|---|---|---|---|---|---|---|---|")
+    for r in (reports.get(cmp_mode) or ref)["per_job"]:
+        parts.append(
+            f"| {r['job_id']} | {r['dnn']} | {r['device']} | "
+            f"{r['approach']} | {r['bs']} | {r['mtl']} | "
+            f"{r['throughput']:.1f} | {r['tail_p95_ms']:.1f}ms | "
+            f"{r['slo_ms']:.1f}ms |")
+    return "\n".join(parts)
+
+
 def collect_summary(recs: dict, variant: str) -> str:
     n = {"OK": 0, "SKIP": 0, "FAIL": 0}
     for (a, s, m, v), r in recs.items():
@@ -71,6 +99,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="experiments/dryrun")
     ap.add_argument("--final", default="experiments/dryrun_final")
+    ap.add_argument("--cluster", default=None,
+                    help="cluster_serve.py --json output to tabulate")
     ap.add_argument("--out", default="experiments/roofline_tables.md")
     args = ap.parse_args()
 
@@ -90,6 +120,9 @@ def main() -> None:
         parts.append(roofline_table(final, "single", "final"))
         parts.append("\n### Final (optimized defaults) — multi-pod\n")
         parts.append(roofline_table(final, "multi", "final"))
+    if args.cluster and os.path.exists(args.cluster):
+        parts.append("\n### Cluster serving — 30-job Table-4 trace\n")
+        parts.append(cluster_tables(json.load(open(args.cluster))))
 
     text = "\n".join(parts) + "\n"
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

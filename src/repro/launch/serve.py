@@ -1,10 +1,14 @@
 """Serving launcher: run a job (paper DNN or assigned LLM arch) under a
-controller and report throughput / p95 / power efficiency.
+controller and report throughput / p95 / power efficiency — or serve the
+whole 30-job Table-4 trace on a simulated cluster.
 
     PYTHONPATH=src python -m repro.launch.serve --job 5 --controller dnnscaler
+    PYTHONPATH=src python -m repro.launch.serve --job 5 --controller hybrid
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --controller clipper --slo-ms 50
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --tiny --real
+    PYTHONPATH=src python -m repro.launch.serve --cluster --devices 12 \
+        --controller hybrid --seconds 240
 """
 
 from __future__ import annotations
@@ -35,10 +39,11 @@ def build_library(estimator: LatencyEstimator, exclude_id: int) -> None:
 
 def make_controller(name: str, executor, slo_s: float, job_id: int = -1,
                     bs: int = 1, mtl: int = 1):
-    if name == "dnnscaler":
+    if name in ("dnnscaler", "hybrid"):
         est = LatencyEstimator(max_mtl=10)
         build_library(est, job_id)
-        return DNNScalerController(executor, slo_s, estimator=est)
+        mode = "hybrid" if name == "hybrid" else "auto"
+        return DNNScalerController(executor, slo_s, estimator=est, mode=mode)
     if name == "clipper":
         return ClipperController(slo_s)
     return StaticController(bs=bs, mtl=mtl)
@@ -72,13 +77,46 @@ def main() -> None:
     ap.add_argument("--real", action="store_true",
                     help="wall-clock executor (tiny models)")
     ap.add_argument("--controller", default="dnnscaler",
-                    choices=["dnnscaler", "clipper", "static"])
+                    choices=["dnnscaler", "hybrid", "clipper", "static"])
+    ap.add_argument("--cluster", action="store_true",
+                    help="serve the full 30-job trace on a simulated fleet")
+    ap.add_argument("--devices", type=int, default=12,
+                    help="fleet size for --cluster")
+    ap.add_argument("--seconds", type=float, default=90.0,
+                    help="simulated-time horizon for --cluster")
     ap.add_argument("--bs", type=int, default=1)
     ap.add_argument("--mtl", type=int, default=1)
     ap.add_argument("--slo-ms", type=float, default=None)
     ap.add_argument("--steps", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.cluster:
+        from repro.serving.cluster import run_paper_cluster
+        if args.controller == "static":
+            ap.error("--controller static is not supported with --cluster "
+                     "(per-job static knobs have no cluster-wide meaning); "
+                     "choose dnnscaler, hybrid, or clipper")
+        for flag, val, default in (("--job", args.job, None),
+                                   ("--arch", args.arch, None),
+                                   ("--slo-ms", args.slo_ms, None),
+                                   ("--bs", args.bs, 1),
+                                   ("--mtl", args.mtl, 1)):
+            if val != default:
+                ap.error(f"{flag} has no effect with --cluster "
+                         "(jobs use their Table-4 SLOs and scaler-chosen "
+                         "knobs)")
+        mode = {"dnnscaler": "auto", "hybrid": "hybrid",
+                "clipper": "clipper"}[args.controller]
+        rep = run_paper_cluster(mode, n_devices=args.devices,
+                                sim_time_limit=args.seconds,
+                                seed=args.seed)
+        agg = rep["aggregate"]
+        print(f"cluster[{mode}]: {agg['jobs']} jobs on {agg['devices']} "
+              f"devices — aggregate {agg['aggregate_throughput']:.1f} "
+              f"items/s, {agg['jobs_meeting_slo']}/{agg['feasible_jobs']} "
+              f"feasible jobs meet SLO, stalls {agg['total_stall_s']:.1f}s")
+        return
 
     if args.job is not None:
         job = PAPER_JOBS[args.job - 1]

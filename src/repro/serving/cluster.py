@@ -1,0 +1,365 @@
+"""Cluster-scale multi-job serving (beyond the paper's single-job scope).
+
+The paper evaluates DNNScaler one job at a time on one Tesla P40; the
+ROADMAP north-star is a production fleet serving heavy multi-job traffic.
+This module adds the missing layer:
+
+  * `DeviceSpec` / `gpu_fleet` describe a heterogeneous fleet: whole GPUs
+    (co-resident jobs each get an equal fractional share of the device,
+    priced through `Device.share`) and TPU pod slices (each job gets a
+    disjoint submesh via `tenancy.plan` — the pod-scale translation of
+    co-location; the job's own MTL knob then subdivides its submesh).
+  * `place` is a greedy SLO-aware packer: jobs are placed tightest-SLO
+    first onto the least-loaded device whose residents (old and new) would
+    still meet alpha*SLO at (bs=1, mtl=1) under the post-placement share;
+    if no device qualifies, the least-loaded one is used anyway (the report
+    surfaces the resulting violation instead of hiding it).
+  * `ClusterEngine` runs one controller per job in lockstep simulated
+    time: an event loop always advances the job with the smallest local
+    clock, so co-scheduled jobs interleave exactly as a shared wall clock
+    would order them.  Instance launch/kill stalls land on the owning
+    job's timeline AND are accounted globally (`stall_time`).  Open-loop
+    mode attaches a Poisson arrival process per job and accounts every
+    request exactly once: completed, rejected (queue overflow), or left in
+    the backlog at the horizon — the conservation invariant the cluster
+    tests pin.
+  * `run_paper_cluster` is the first-class scenario: the 30 Table-4 jobs
+    on a simulated fleet under {paper DNNScaler, HybridScaler, Clipper,
+    pure-B, pure-MT} controller policies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving import device_model as dm
+from repro.serving import tenancy
+from repro.serving.engine import Action
+from repro.serving.executor import SimExecutor
+from repro.serving.metrics import RunAccumulator, TailLatencyWindow
+
+PLACEMENT_ALPHA = 0.85   # the scalers' hysteresis floor (paper alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """One fleet member: a whole accelerator or a TPU pod slice."""
+
+    device: dm.Device
+    mesh_shape: Optional[tuple] = None    # None = whole-GPU sharing
+    name: str = ""
+
+    def label(self, idx: int) -> str:
+        return self.name or f"{self.device.name}/{idx}"
+
+
+def gpu_fleet(n: int, device: dm.Device = dm.TESLA_P40) -> List[DeviceSpec]:
+    return [DeviceSpec(device=device, name=f"{device.name}/{i}")
+            for i in range(n)]
+
+
+def _submesh_for(mesh_shape: tuple, n_jobs: int):
+    """Smallest feasible split of the pod slice into >= n_jobs submeshes."""
+    return tenancy.plan_at_least(mesh_shape, n_jobs)
+
+
+def _job_share(spec: DeviceSpec, n_jobs: int) -> float:
+    """Fraction of `spec` each of n_jobs co-resident jobs receives."""
+    if n_jobs <= 1:
+        return 1.0
+    if spec.mesh_shape is not None:
+        p = _submesh_for(spec.mesh_shape, n_jobs)
+        # over-subscribed slice (more jobs than chips): time-multiplexed
+        # equal share, mirroring the executor construction
+        return p.share if p is not None else 1.0 / n_jobs
+    return 1.0 / n_jobs
+
+
+def _base_latency(spec: DeviceSpec, prof: dm.JobProfile, n_jobs: int) -> float:
+    share = _job_share(spec, n_jobs)
+    if share <= 0.0:
+        return float("inf")
+    return dm.batch_latency(spec.device, prof, 1, share=share)
+
+
+def place(jobs: Sequence, fleet: Sequence[DeviceSpec], *,
+          alpha: float = PLACEMENT_ALPHA) -> List[int]:
+    """Greedy SLO-aware placement -> device index per job (same order)."""
+    profs = [j.profile() for j in jobs]
+    assign: List[Optional[int]] = [None] * len(jobs)
+    residents: List[List[int]] = [[] for _ in fleet]
+
+    def load(d: int) -> float:
+        return sum(profs[j].occupancy for j in residents[d])
+
+    for i in sorted(range(len(jobs)), key=lambda i: jobs[i].slo_s):
+        feasible, fallback = [], []
+        for d, spec in enumerate(fleet):
+            k = len(residents[d]) + 1
+            ok = all(_base_latency(spec, profs[j], k)
+                     <= alpha * jobs[j].slo_s
+                     for j in residents[d] + [i])
+            (feasible if ok else fallback).append(d)
+        pool = feasible or fallback
+        best = min(pool, key=lambda d: (load(d), len(residents[d]), d))
+        assign[i] = best
+        residents[best].append(i)
+    return assign
+
+
+class _JobState:
+    """Per-job serving state inside the cluster (one controller each)."""
+
+    def __init__(self, job, controller, executor, *, window: int,
+                 arrival_rate: Optional[float], max_queue: int, seed: int):
+        self.job = job
+        self.controller = controller
+        self.executor = executor
+        self.window = TailLatencyWindow(window=window)
+        self.acc = RunAccumulator()
+        self.clock = 0.0
+        self.prev = Action(bs=1, mtl=1)
+        self.stall_time = 0.0
+        self.arrival_rate = arrival_rate
+        self.max_queue = max_queue
+        self.queue: list = []             # arrival timestamps (open loop)
+        self.rng = (np.random.default_rng(seed)
+                    if arrival_rate is not None else None)
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0
+
+
+class ClusterEngine:
+    """Serve many jobs across a fleet, one controller each, in lockstep
+    simulated time (see module docstring)."""
+
+    def __init__(self, jobs: Sequence, fleet: Sequence[DeviceSpec], *,
+                 controller_factory: Callable, window: int = 200,
+                 instance_launch_s: float = 2.0, instance_kill_s: float = 0.3,
+                 arrival_rates: Optional[dict] = None, max_queue: int = 10_000,
+                 seed: int = 0):
+        self.jobs = list(jobs)
+        self.fleet = list(fleet)
+        self.instance_launch_s = instance_launch_s
+        self.instance_kill_s = instance_kill_s
+        self.placement = place(self.jobs, self.fleet)
+        counts = [self.placement.count(d) for d in range(len(self.fleet))]
+        self.stall_time = 0.0
+        self.event_log: list = []         # (global time, job_id) pop order
+
+        self.states: List[_JobState] = []
+        arrival_rates = arrival_rates or {}
+        for i, job in enumerate(self.jobs):
+            spec = self.fleet[self.placement[i]]
+            share = _job_share(spec, counts[self.placement[i]])
+            prof = job.profile()
+            if spec.mesh_shape is not None:
+                k = counts[self.placement[i]]
+                p = _submesh_for(spec.mesh_shape, k)
+                if p is not None:
+                    mesh, dev = p.replica_shape, spec.device.share(p.share)
+                else:
+                    # more jobs than chips: no disjoint submesh exists, so
+                    # the slice is time-multiplexed — price an equal 1/k
+                    # share (pricing the FULL device here would serve every
+                    # over-subscribed job as sole owner and overstate the
+                    # aggregate k-fold)
+                    mesh, dev = spec.mesh_shape, spec.device.share(1.0 / k)
+                mk = lambda s, dev=dev, mesh=mesh, prof=prof: SimExecutor(
+                    prof, device=dev, mesh_shape=mesh, seed=s)
+            else:
+                dev = spec.device.share(share) if share < 1.0 else spec.device
+                mk = lambda s, dev=dev, prof=prof: SimExecutor(
+                    prof, device=dev, seed=s)
+            serving_ex = mk(seed + i)
+            profiling_ex = mk(seed + 1000 + i)   # probes stay off the books
+            controller = controller_factory(job, profiling_ex)
+            self.states.append(_JobState(
+                job, controller, serving_ex, window=window,
+                arrival_rate=arrival_rates.get(job.job_id),
+                max_queue=max_queue, seed=seed + 2000 + i))
+
+    # -- one serving step for one job ---------------------------------------
+    def _step(self, st: _JobState) -> None:
+        ctrl = st.controller
+        if hasattr(ctrl, "set_slo"):
+            ctrl.set_slo(st.job.slo_s)
+        act = ctrl.action()
+        win_start = st.clock        # arrivals keep coming during any stall
+        if act.mtl != st.prev.mtl:
+            delta = act.mtl - st.prev.mtl
+            cost = (self.instance_launch_s * max(delta, 0) +
+                    self.instance_kill_s * max(-delta, 0))
+            st.clock += cost
+            st.stall_time += cost
+            self.stall_time += cost
+            st.acc.total_time += cost
+            st.window.reset()
+        elif act.bs != st.prev.bs:
+            st.window.reset()            # re-measure the tail at the new BS
+
+        res = st.executor.run_step(act.bs, act.mtl)
+        t0, t1 = st.clock, st.clock + res["step_time"]
+        slo = st.job.slo_s
+        if st.rng is not None:           # open loop: queue + conservation
+            # the arrival window spans the launch/kill stall too — the
+            # outside world does not pause while instances restart, and
+            # served latencies (t1 - ts) must include that wait
+            window = t1 - win_start
+            n_arr = int(st.rng.poisson(st.arrival_rate * window))
+            st.submitted += n_arr
+            if n_arr:
+                st.queue.extend(np.sort(
+                    win_start + st.rng.random(n_arr) * window))
+            if len(st.queue) > st.max_queue:
+                drop = len(st.queue) - st.max_queue
+                st.rejected += drop
+                st.queue = st.queue[drop:]
+            cap = act.bs * act.mtl
+            served, st.queue = st.queue[:cap], st.queue[cap:]
+            st.completed += len(served)
+            st.acc.record_step(
+                items=len(served), step_time=res["step_time"],
+                power_w=res["power_w"],
+                request_latencies=[t1 - ts for ts in served], slo=slo)
+        else:                            # closed loop: every item completes
+            st.submitted += res["items"]
+            st.completed += res["items"]
+            st.acc.record_step(
+                items=res["items"], step_time=res["step_time"],
+                power_w=res["power_w"],
+                request_latencies=res["request_latencies"], slo=slo)
+        # controllers observe SERVICE latency (see OpenLoopEngine's note)
+        st.window.add_many(res["request_latencies"])
+        st.acc.trace.append((t1, act.bs, act.mtl, st.window.p95,
+                             res["throughput"], slo))
+        ctrl.observe(st.window.p95, res)
+        st.clock = t1
+        st.prev = act
+
+    def run(self, *, sim_time_limit: float = 120.0,
+            max_steps: int = 500_000) -> dict:
+        heap = [(st.clock, i) for i, st in enumerate(self.states)]
+        heapq.heapify(heap)
+        steps = 0
+        while heap and steps < max_steps:
+            t, i = heapq.heappop(heap)
+            if t >= sim_time_limit:
+                continue                 # this job reached the horizon
+            self.event_log.append((t, self.states[i].job.job_id))
+            self._step(self.states[i])
+            heapq.heappush(heap, (self.states[i].clock, i))
+            steps += 1
+        return self.report()
+
+    def report(self) -> dict:
+        counts = [self.placement.count(d) for d in range(len(self.fleet))]
+        per_job = []
+        for st, d in zip(self.states, self.placement):
+            s = st.acc.summary()
+            # a job is SLO-feasible on its slice iff even (bs=1, mtl=1)
+            # fits under the SLO there; infeasible jobs are served
+            # best-effort and flagged, not hidden
+            base = _base_latency(self.fleet[d], st.job.profile(), counts[d])
+            per_job.append({
+                "job_id": st.job.job_id,
+                "dnn": f"{st.job.dnn}/{st.job.dataset}",
+                "device": self.fleet[d].label(d),
+                "approach": getattr(st.controller, "approach",
+                                    getattr(st.controller, "name", "?")),
+                "bs": st.prev.bs, "mtl": st.prev.mtl,
+                "slo_ms": float(st.job.slo_ms),
+                "p95_ms": float(s["p95_s"]) * 1e3,
+                "tail_p95_ms": float(st.acc.tail_p95()) * 1e3,
+                "feasible": bool(base <= st.job.slo_s),
+                "slo_attainment": float(s["slo_attainment"]),
+                "throughput": float(s["throughput"]),
+                "stall_s": float(st.stall_time),
+                "submitted": st.submitted, "completed": st.completed,
+                "rejected": st.rejected, "backlog": len(st.queue),
+            })
+        makespan = float(max((st.clock for st in self.states), default=0.0))
+        completed = sum(st.completed for st in self.states)
+        feasible = [r for r in per_job if r["feasible"]]
+        return {
+            "per_job": per_job,
+            "aggregate": {
+                "jobs": len(self.states),
+                "devices": len(self.fleet),
+                "makespan_s": makespan,
+                "aggregate_throughput":
+                    completed / makespan if makespan else 0.0,
+                "total_stall_s": float(self.stall_time),
+                "min_attainment":
+                    min((r["slo_attainment"] for r in per_job), default=1.0),
+                "feasible_jobs": len(feasible),
+                "jobs_meeting_slo":
+                    int(sum(r["tail_p95_ms"] <= r["slo_ms"]
+                            for r in feasible)),
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# The first-class scenario: the paper's 30 jobs as one cluster workload.
+# ---------------------------------------------------------------------------
+def paper_controller_factory(mode: str = "auto", *, max_mtl: int = 10,
+                             library_jobs: int = 8):
+    """Factory of per-job controllers for `ClusterEngine`.
+
+    mode: "auto" (the paper's B-or-MT pick), "hybrid", "B", "MT" — all via
+    DNNScalerController — or "clipper".  The matrix-completion estimator is
+    seeded with a shared library of 'historically profiled' jobs, exactly
+    like the single-job launchers do.
+    """
+    from repro.core.controller import ClipperController, DNNScalerController
+    from repro.core.matrix_completion import LatencyEstimator
+    from repro.serving.workload import PAPER_JOBS
+
+    library = []
+    for j in PAPER_JOBS[:library_jobs]:
+        prof = j.profile()
+        library.append((j.job_id,
+                        {m: dm.mt_latency(dm.TESLA_P40, prof, 1, m)
+                         for m in range(1, max_mtl + 1)}))
+
+    def make(job, executor):
+        if mode == "clipper":
+            return ClipperController(job.slo_s)
+        # on a TPU submesh the MTL knob cannot exceed the replica's chip
+        # count — an estimate past it would send the scaler into the
+        # infeasible (inf-latency) region and poison the job clock
+        cap = max_mtl
+        if getattr(executor, "mesh_shape", None) is not None:
+            cap = max(1, min(cap, tenancy.max_tenancy(executor.mesh_shape)))
+        est = LatencyEstimator(max_mtl=cap)
+        for jid, row in library:
+            if jid != job.job_id:    # never leak the served job's own
+                est.add_library_row(row)   # ground-truth curve (held-out,
+                                           # like build_library's exclude_id)
+        return DNNScalerController(executor, job.slo_s, estimator=est,
+                                   max_mtl=cap, mode=mode)
+
+    return make
+
+
+def run_paper_cluster(mode: str = "auto", *, jobs: Optional[Sequence] = None,
+                      fleet: Optional[Sequence[DeviceSpec]] = None,
+                      n_devices: int = 12, sim_time_limit: float = 90.0,
+                      arrival_rates: Optional[dict] = None,
+                      seed: int = 0) -> dict:
+    """Serve the Table-4 jobs on a simulated fleet under one policy."""
+    from repro.serving.workload import PAPER_JOBS
+    jobs = list(jobs) if jobs is not None else list(PAPER_JOBS)
+    fleet = list(fleet) if fleet is not None else gpu_fleet(n_devices)
+    eng = ClusterEngine(jobs, fleet,
+                        controller_factory=paper_controller_factory(mode),
+                        arrival_rates=arrival_rates, seed=seed)
+    rep = eng.run(sim_time_limit=sim_time_limit)
+    rep["aggregate"]["mode"] = mode
+    return rep

@@ -102,6 +102,19 @@ def batch_latency(dev: Device, prof: JobProfile, bs: int,
     return bs * (prof.host_ms * rho(bs) + gpu_img_ms(prof, bs, d)) / 1e3
 
 
+def step_latency(dev: Device, prof: JobProfile, bs: int,
+                 share: float = 1.0) -> dict:
+    """Latency breakdown for one batch on a (possibly fractional) device.
+
+    `share` < 1 prices a submesh / device slice (TPU tenancy, cluster
+    co-location).  `t_step` equals batch_latency(dev, prof, bs, share)."""
+    d = dev if share == 1.0 else dev.share(share)
+    t_host = bs * prof.host_ms * rho(bs) / 1e3
+    t_gpu = bs * gpu_img_ms(prof, bs, d) / 1e3
+    return {"t_step": t_host + t_gpu, "t_host": t_host, "t_gpu": t_gpu,
+            "share": share}
+
+
 def mt_latency(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
     """Per-instance step latency (seconds) with mtl co-located instances."""
     if mtl <= 1:

@@ -122,6 +122,7 @@ class OpenLoopEngine(ServingEngine):
             if hasattr(controller, "set_slo"):
                 controller.set_slo(slo)
             act = controller.action()
+            win_start = self.acc.total_time   # arrivals span any stall too
             if act.mtl != prev.mtl:
                 delta = act.mtl - prev.mtl
                 cost = (self.instance_launch_s * max(delta, 0) +
@@ -135,10 +136,12 @@ class OpenLoopEngine(ServingEngine):
             res = self.executor.run_step(act.bs, act.mtl)
             t0 = self.acc.total_time
             t1 = t0 + res["step_time"]
-            # arrivals during this step
-            n_arr = int(self._rng.poisson(self._rate(t0) * res["step_time"]))
+            # arrivals during this step INCLUDING the launch/kill stall —
+            # the outside world does not pause while instances restart
+            window = t1 - win_start
+            n_arr = int(self._rng.poisson(self._rate(win_start) * window))
             self.queue.extend(
-                np.sort(t0 + self._rng.random(n_arr) * res["step_time"])
+                np.sort(win_start + self._rng.random(n_arr) * window)
                 if n_arr else [])
             if len(self.queue) > self.max_queue:
                 self.dropped += len(self.queue) - self.max_queue

@@ -37,7 +37,10 @@ class SimExecutor:
     # -- pricing ------------------------------------------------------------
     def mean_latency(self, bs: int, mtl: int) -> float:
         if self.mesh_shape is not None:
-            p = tenancy.plan(self.mesh_shape, mtl)
+            # non-divisor MTLs over-partition (plan_at_least) instead of
+            # returning inf — an inf step would poison the engine clock
+            # and every downstream metric the moment a scaler probes one
+            p = tenancy.plan_at_least(self.mesh_shape, mtl)
             if p is None:
                 return float("inf")
             return dm.step_latency(self.device, self.profile, bs,

@@ -76,6 +76,15 @@ class RunAccumulator:
             return 0.0
         return float(np.quantile(np.asarray(self.latencies), 0.95))
 
+    def tail_p95(self, frac: float = 0.5) -> float:
+        """p95 over the last `frac` of requests — the steady-state tail once
+        the scaler's search transient (which p95 over the whole run mixes
+        in) has died out."""
+        if not self.latencies:
+            return 0.0
+        n = max(1, int(len(self.latencies) * frac))
+        return float(np.quantile(np.asarray(self.latencies[-n:]), 0.95))
+
     @property
     def slo_attainment(self) -> float:
         if not self.requests:

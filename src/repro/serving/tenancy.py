@@ -53,6 +53,22 @@ def plan(mesh_shape: tuple, mtl: int) -> Optional[TenancyPlan]:
                        replica_shape=(d, m), replicas=mtl)
 
 
+def plan_at_least(mesh_shape: tuple, mtl: int) -> Optional[TenancyPlan]:
+    """Smallest feasible split into >= mtl submeshes.
+
+    A non-divisor MTL over-partitions: the slice is cut into the next
+    feasible number of equal submeshes and the surplus ones sit idle —
+    you cannot carve 256 chips into 3 equal submeshes, so you take the
+    4-way split and run 3 replicas.  Returns None only when mtl exceeds
+    the chip count."""
+    total = mesh_shape[-2] * mesh_shape[-1]
+    for k in range(mtl, total + 1):
+        p = plan(mesh_shape, k)
+        if p is not None:
+            return dataclasses.replace(p, mtl=mtl)
+    return None
+
+
 def _gcd_factor(n: int, k: int) -> int:
     """Largest divisor of n that also divides k."""
     best = 1

@@ -1,0 +1,127 @@
+"""ClusterEngine tests: request conservation, simulated-clock monotonicity,
+contention (adding a job never speeds another job up), placement, and the
+cluster-level controller policies."""
+
+import pytest
+
+from repro.core.controller import StaticController
+from repro.serving import device_model as dm
+from repro.serving.cluster import (ClusterEngine, DeviceSpec, gpu_fleet,
+                                   place, paper_controller_factory,
+                                   run_paper_cluster)
+from repro.serving.workload import PAPER_JOBS
+
+
+def _static_factory(bs=1, mtl=1):
+    return lambda job, executor: StaticController(bs=bs, mtl=mtl)
+
+
+JOBS2 = [PAPER_JOBS[0], PAPER_JOBS[2]]          # inception v1 + v4
+
+
+# ---------------------------------------------------------------------------
+# Conservation: every submitted request is completed or rejected exactly once
+# ---------------------------------------------------------------------------
+def test_closed_loop_conservation():
+    eng = ClusterEngine(JOBS2, gpu_fleet(1),
+                        controller_factory=_static_factory())
+    rep = eng.run(sim_time_limit=10.0)
+    for r in rep["per_job"]:
+        assert r["submitted"] == r["completed"]
+        assert r["rejected"] == 0 and r["backlog"] == 0
+        assert r["completed"] > 0
+
+
+def test_open_loop_conservation_with_rejections():
+    rates = {j.job_id: 500.0 for j in JOBS2}    # overload: force drops
+    eng = ClusterEngine(JOBS2, gpu_fleet(1),
+                        controller_factory=_static_factory(),
+                        arrival_rates=rates, max_queue=50)
+    rep = eng.run(sim_time_limit=20.0)
+    total_rejected = 0
+    for r in rep["per_job"]:
+        assert r["submitted"] == r["completed"] + r["rejected"] + r["backlog"]
+        total_rejected += r["rejected"]
+    assert total_rejected > 0                   # the overload actually bit
+
+
+# ---------------------------------------------------------------------------
+# Lockstep simulated time
+# ---------------------------------------------------------------------------
+def test_global_event_order_is_monotone():
+    eng = ClusterEngine(list(PAPER_JOBS[:4]), gpu_fleet(2),
+                        controller_factory=_static_factory())
+    eng.run(sim_time_limit=10.0)
+    times = [t for t, _ in eng.event_log]
+    assert times == sorted(times)
+    assert len({jid for _, jid in eng.event_log}) == 4   # all jobs ran
+
+
+def test_per_job_clocks_strictly_increase():
+    eng = ClusterEngine(JOBS2, gpu_fleet(2),
+                        controller_factory=_static_factory())
+    eng.run(sim_time_limit=10.0)
+    for st in eng.states:
+        trace_t = [t for t, *_ in st.acc.trace]
+        assert all(b > a for a, b in zip(trace_t, trace_t[1:]))
+        assert st.clock == pytest.approx(trace_t[-1])
+
+
+def test_instance_stalls_accounted_globally_and_per_job():
+    eng = ClusterEngine([PAPER_JOBS[0]], gpu_fleet(1),
+                        controller_factory=_static_factory(mtl=4),
+                        instance_launch_s=2.0)
+    eng.run(sim_time_limit=5.0)
+    assert eng.stall_time == pytest.approx(2.0 * 3)      # 1 -> 4 instances
+    assert eng.states[0].stall_time == pytest.approx(2.0 * 3)
+
+
+# ---------------------------------------------------------------------------
+# Contention: a neighbour can only ever slow you down
+# ---------------------------------------------------------------------------
+def test_adding_a_job_never_increases_another_jobs_throughput():
+    alone = ClusterEngine([PAPER_JOBS[0]], gpu_fleet(1),
+                          controller_factory=_static_factory(), seed=0)
+    ra = alone.run(sim_time_limit=30.0)["per_job"][0]
+    shared = ClusterEngine(JOBS2, gpu_fleet(1),
+                           controller_factory=_static_factory(), seed=0)
+    rs = next(r for r in shared.run(sim_time_limit=30.0)["per_job"]
+              if r["job_id"] == PAPER_JOBS[0].job_id)
+    assert rs["throughput"] <= ra["throughput"] * 1.001
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+def test_placement_covers_all_jobs_and_prefers_feasibility():
+    fleet = gpu_fleet(4)
+    assign = place(list(PAPER_JOBS[:8]), fleet)
+    assert len(assign) == 8
+    assert all(0 <= d < 4 for d in assign)
+    # the tightest-SLO job of the batch should not share with 3+ others
+    tight = min(range(8), key=lambda i: PAPER_JOBS[i].slo_s)
+    assert assign.count(assign[tight]) <= 3
+
+
+def test_tpu_submesh_fleet_runs():
+    fleet = [DeviceSpec(device=dm.TPU_V5E, mesh_shape=(4, 4), name="pod0")]
+    eng = ClusterEngine(JOBS2, fleet, controller_factory=_static_factory())
+    rep = eng.run(sim_time_limit=5.0)
+    assert all(r["completed"] > 0 for r in rep["per_job"])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end policy smoke (kept tiny; the full 30-job run lives in
+# examples/cluster_serve.py and benchmarks)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_hybrid_not_worse_than_paper_on_mixed_slice():
+    jobs = [PAPER_JOBS[i] for i in (0, 3, 4, 5)]   # MT-heavy slice
+    fleet = gpu_fleet(2)
+    rep_a = run_paper_cluster("auto", jobs=jobs, fleet=fleet,
+                              sim_time_limit=120.0)
+    rep_h = run_paper_cluster("hybrid", jobs=jobs, fleet=fleet,
+                              sim_time_limit=120.0)
+    thr_a = rep_a["aggregate"]["aggregate_throughput"]
+    thr_h = rep_h["aggregate"]["aggregate_throughput"]
+    assert thr_h >= 0.95 * thr_a

@@ -1,0 +1,206 @@
+"""Property-based invariant tests for the three scalers (Algorithm 1 and the
+2-D HybridScaler), plus the Table-4 decision regression test.
+
+Invariants pinned here:
+  * knobs always stay in [1, max] under arbitrary p95 feedback;
+  * no movement while p95 sits inside the [alpha*SLO, SLO] band;
+  * `infeasible` is only reachable at bs == 1 (and mtl == 1 for Hybrid);
+  * known-bad damping never re-probes a pinned point before the amnesty
+    window, and re-probes it after.
+
+With hypothesis installed these run randomized; without it the conftest
+shim degrades them to fixed boundary/midpoint examples.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controller import DNNScalerController
+from repro.core.scaler import ALPHA, BatchScaler, HybridScaler, MTScaler
+from repro.serving.executor import SimExecutor
+from repro.serving.workload import PAPER_JOBS
+
+SLO = 0.1
+
+
+class _FixedEst:
+    """pick_mtl stub: seed the scaler at a chosen MTL."""
+
+    def __init__(self, mtl=5):
+        self.mtl = mtl
+
+    def pick_mtl(self, observed, slo):
+        return self.mtl, np.zeros(10)
+
+
+def _scalers(seed_mtl=5):
+    return [
+        BatchScaler(SLO, decision_interval=1),
+        MTScaler(SLO, _FixedEst(seed_mtl), {1: 0.01}, decision_interval=1),
+        HybridScaler(SLO, _FixedEst(seed_mtl), {1: 0.01}, primary="MT",
+                     decision_interval=1),
+        HybridScaler(SLO, decision_interval=1),   # primary B, seed (1, 1)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Bounds under arbitrary feedback
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.randoms(use_true_random=False))
+def test_knobs_stay_in_bounds(rnd):
+    for sc in _scalers():
+        for _ in range(300):
+            act = sc.action()
+            assert 1 <= act.bs <= 128
+            assert 1 <= act.mtl <= 10
+            # p95 anywhere between deep slack and a 4x gross violation
+            sc.observe(rnd.uniform(0.0, 4.0) * SLO)
+        act = sc.action()
+        assert 1 <= act.bs <= 128 and 1 <= act.mtl <= 10
+
+
+# ---------------------------------------------------------------------------
+# No movement inside the hysteresis band
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.floats(ALPHA * SLO + 1e-6, 0.98 * SLO - 1e-6),
+       st.randoms(use_true_random=False))
+def test_no_movement_inside_band(in_band_p95, rnd):
+    # the 0.98*SLO upper edge keeps the fed values inside every scaler's
+    # band even if HybridScaler's optional safety margin (its band is
+    # [alpha*(1-safety)*SLO, (1-safety)*SLO]; safety defaults to 0) is
+    # ever enabled with a small value
+    for sc in _scalers():
+        # arbitrary prefix to land the scaler in an arbitrary state
+        for _ in range(50):
+            sc.observe(rnd.uniform(0.0, 2.0) * SLO)
+        sc.observe(in_band_p95)           # settle any pending probe check
+        act0 = sc.action()
+        for _ in range(40):
+            sc.observe(in_band_p95)
+            act = sc.action()
+            assert (act.bs, act.mtl) == (act0.bs, act0.mtl), type(sc).__name__
+
+
+# ---------------------------------------------------------------------------
+# infeasible only reachable at the knob floor
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 10))
+def test_infeasible_only_at_floor(seed_mtl):
+    for sc in _scalers(seed_mtl):
+        if not hasattr(sc, "infeasible"):
+            continue
+        for _ in range(400):
+            sc.observe(2.0 * SLO)         # persistent violation
+            act = sc.action()
+            if sc.infeasible:
+                assert act.bs == 1
+                if isinstance(sc, HybridScaler):
+                    assert act.mtl == 1
+        assert sc.infeasible              # the floor violates too
+
+
+# ---------------------------------------------------------------------------
+# Known-bad damping + amnesty
+# ---------------------------------------------------------------------------
+def test_batch_scaler_known_bad_not_reprobed_before_amnesty():
+    sc = BatchScaler(SLO, decision_interval=1)
+    sc.observe(0.01)                      # deep slack: jump to the midpoint
+    bad = sc.bs
+    assert bad > 1
+    sc.observe(2.0 * SLO)                 # spike filter eats the first one
+    sc.observe(2.0 * SLO)                 # persistent: pin + descend
+    assert sc._known_bad == bad
+    assert sc.bs < bad
+    # climb back up: the pinned point must not be re-probed until the
+    # 12-converged-decision amnesty clears it
+    seen_converged = 0
+    while seen_converged < 12:
+        before = sc.converged_steps
+        sc.observe(0.01)
+        assert sc.bs < bad
+        seen_converged = max(seen_converged, sc.converged_steps)
+        if sc.converged_steps == 0 and before == 0 and sc.bs == bad - 1:
+            seen_converged = max(seen_converged, 1)
+    # amnesty has cleared: the next slack decision may re-probe upward
+    sc.observe(0.01)
+    assert sc._known_bad is None or sc.bs <= bad
+
+
+def test_mt_scaler_known_bad_not_reprobed_before_amnesty():
+    sc = MTScaler(SLO, _FixedEst(5), {1: 0.01}, decision_interval=1)
+    sc.observe(2.0 * SLO)
+    sc.observe(2.0 * SLO)                 # pin mtl=5, drop to 4
+    assert sc._known_bad == 5 and sc.mtl == 4
+    for _ in range(11):                   # converged_steps accumulates
+        sc.observe(0.01)                  # slack, but 5 is pinned
+        assert sc.mtl == 4
+    sc.observe(0.01)                      # 12th: amnesty clears the pin
+    sc.observe(0.01)                      # now the re-probe is allowed
+    assert sc.mtl == 5
+
+
+def test_hybrid_known_bad_respects_amnesty_window():
+    # max_mtl=1 freezes the orthogonal axis so the probe pattern is pure BS
+    sc = HybridScaler(SLO, decision_interval=1, amnesty=20, max_mtl=1)
+    sc.observe(0.2 * ALPHA * SLO)         # slack: grow bs 1 -> 2
+    assert sc.action().bs == 2
+    sc.observe(3.0 * SLO)                 # gross: undo the probe, pin (2, 1)
+    assert sc.action().bs == 1
+    assert sc.is_pinned(2, 1)
+    pinned_at = sc._decisions
+    # within the amnesty window the pinned point is never re-probed
+    while sc._decisions - pinned_at < sc.amnesty - 1:
+        sc.observe(0.2 * ALPHA * SLO)
+        assert (sc.action().bs, sc.action().mtl) != (2, 1)
+    # after the window the search may try it again (second strike makes it
+    # permanent via the probe-target dominance rule)
+    for _ in range(10):
+        sc.observe(0.2 * ALPHA * SLO)
+        if sc.action().bs == 2:
+            break
+    assert sc.action().bs == 2
+    sc.observe(3.0 * SLO)                 # strike two: now permanent
+    assert sc.action().bs == 1
+    for _ in range(3 * sc.amnesty):
+        sc.observe(0.2 * ALPHA * SLO)
+        assert sc.action().bs == 1        # dominance blocks everything >= 2
+
+
+def test_hybrid_secondary_axis_needs_two_slack_readings():
+    """One band-edge wobble must not trigger an (expensive) MTL probe."""
+    sc = HybridScaler(SLO, decision_interval=1, max_bs=1)   # bs frozen
+    sc.observe(0.9 * SLO)                 # in band
+    sc.observe(0.5 * ALPHA * SLO)         # first slack reading
+    assert sc.action().mtl == 1           # gated
+    sc.observe(0.5 * ALPHA * SLO)         # second consecutive slack
+    assert sc.action().mtl == 2
+
+
+# ---------------------------------------------------------------------------
+# Table-4 regression: the controller reproduces the paper's decisions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("jid", [1, 3, 5, 11, 12, 19, 26, 29])
+def test_controller_matches_paper_table4_decision(jid):
+    """DNNScalerController under SimExecutor picks the method the paper's
+    Table 4 records for this job — pinning the eq. 3-5 profiling behavior
+    against refactors (job 23, the one structural disagreement, is
+    documented in EXPERIMENTS.md and excluded)."""
+    job = PAPER_JOBS[jid - 1]
+    ctrl = DNNScalerController(SimExecutor(job.profile(), seed=jid),
+                               job.slo_s)
+    assert ctrl.approach == job.paper_method
+
+
+def test_hybrid_mode_reports_h_and_acts_jointly():
+    job = PAPER_JOBS[0]                   # inception_v1 — an MT job
+    ctrl = DNNScalerController(SimExecutor(job.profile(), seed=1),
+                               job.slo_s, mode="hybrid")
+    assert ctrl.approach == "H"
+    assert isinstance(ctrl.scaler, HybridScaler)
+    assert ctrl.scaler.primary == "MT"    # profiler picked the seed axis
+    act = ctrl.action()
+    assert act.mtl >= 1 and act.bs == 1   # seeded at the MT estimate
