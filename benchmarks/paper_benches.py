@@ -26,11 +26,11 @@ DEV = dm.TESLA_P40
 
 def _estimator(exclude_id=-1):
     est = LatencyEstimator(max_mtl=10)
+    mtls = list(range(1, 11))
     for j in PAPER_JOBS[:8]:
         if j.job_id != exclude_id:
-            prof = j.profile()
-            est.add_library_row({m: dm.mt_latency(DEV, prof, 1, m)
-                                 for m in range(1, 11)})
+            curve = dm.mt_latency_curve(DEV, j.profile(), 1, mtls)
+            est.add_library_row(dict(zip(mtls, curve)))
     return est
 
 
@@ -186,10 +186,9 @@ def bench_fig11_sole_mt():
             lat = dm.batch_latency(DEV, prof, bs)
             if lat <= j.slo_s:
                 thr_b.append(bs / lat)
-        for mtl in range(1, 11):
-            lat = dm.mt_latency(DEV, prof, 1, mtl)
-            if lat <= j.slo_s:
-                thr_mt.append(dm.mt_throughput(DEV, prof, 1, mtl))
+        mtls = np.arange(1, 11)
+        lats = dm.mt_latency_curve(DEV, prof, 1, mtls)
+        thr_mt = [m / lat for m, lat in zip(mtls, lats) if lat <= j.slo_s]
         best_b = max(thr_b, default=1 / dm.batch_latency(DEV, prof, 1))
         best_mt = max(thr_mt, default=0.0)
         rows.append((f"fig11/job{jid}", 0.0,

@@ -1,5 +1,11 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--only X]``.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--only X]
+[--json DIR]``.
+
+``--json DIR`` additionally writes one ``BENCH_<suite>.json`` per suite
+(rows + wall time + autotune-cache stats) — the persisted perf trajectory:
+each PR's recorded baselines live next to the previous ones, so a
+regression shows up as a diff, not a memory.
 
 Suites (one per paper table/figure — DESIGN.md §8):
   fig1          BS / MTL sweeps (preliminary study)
@@ -23,6 +29,8 @@ Suites (one per paper table/figure — DESIGN.md §8):
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -50,18 +58,47 @@ def suites():
     }
 
 
+_COUNTER_KEYS = ("hits", "misses", "timings", "tunes")
+
+
+def _autotune_stats() -> dict:
+    try:
+        from repro.perf import autotune
+        return autotune.cache_stats()
+    except Exception:  # noqa: BLE001 — stats must never fail a bench run
+        return {}
+
+
+def _autotune_delta(before: dict, after: dict) -> dict:
+    """Per-suite view: counters as deltas (one process runs many suites;
+    cumulative numbers would credit earlier suites' tuning to later ones),
+    cache size/location as absolutes."""
+    out = dict(after)
+    for k in _COUNTER_KEYS:
+        if k in after and k in before:
+            out[k] = after[k] - before[k]
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (default: all)")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="also write BENCH_<suite>.json files into DIR "
+                         "(default: current directory)")
     args = ap.parse_args()
     table = suites()
     names = args.only.split(",") if args.only else list(table)
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
 
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         fn = table[name]
+        at_before = _autotune_stats()
         t0 = time.time()
         try:
             rows = fn()
@@ -69,10 +106,21 @@ def main() -> None:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
             failures += 1
             continue
+        wall = time.time() - t0
         for rname, us, derived in rows:
             print(f"{rname},{us:.2f},{derived}")
-        print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},ok",
-              file=sys.stderr)
+        print(f"{name}/_suite_wall,{wall * 1e6:.0f},ok", file=sys.stderr)
+        if args.json:
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({
+                    "suite": name,
+                    "suite_wall_s": wall,
+                    "rows": [{"name": r, "us_per_call": u, "derived": d}
+                             for r, u, d in rows],
+                    "autotune": _autotune_delta(at_before, _autotune_stats()),
+                }, f, indent=2)
+            print(f"{name} -> {path}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

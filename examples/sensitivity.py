@@ -21,10 +21,10 @@ def run_case(job, direction):
         slo_fn = lambda t: job.slo_s * 0.5 if t < 60 else job.slo_s
 
     est = LatencyEstimator(max_mtl=10)
+    mtls = list(range(1, 11))
     for j in PAPER_JOBS[:8]:
-        p = j.profile()
-        est.add_library_row({m: dm.mt_latency(dm.TESLA_P40, p, 1, m)
-                             for m in range(1, 11)})
+        curve = dm.mt_latency_curve(dm.TESLA_P40, j.profile(), 1, mtls)
+        est.add_library_row(dict(zip(mtls, curve)))
     ctrl = DNNScalerController(SimExecutor(prof, seed=0), slo_fn(0.0),
                                estimator=est)
     eng = ServingEngine(SimExecutor(prof, seed=1), slo_fn(0.0),

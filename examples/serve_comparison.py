@@ -25,10 +25,10 @@ def main():
     ids = [int(x) for x in args.jobs.split(",")]
 
     est = LatencyEstimator(max_mtl=10)
+    mtls = list(range(1, 11))
     for j in PAPER_JOBS[:8]:
-        prof = j.profile()
-        est.add_library_row({m: dm.mt_latency(dm.TESLA_P40, prof, 1, m)
-                             for m in range(1, 11)})
+        curve = dm.mt_latency_curve(dm.TESLA_P40, j.profile(), 1, mtls)
+        est.add_library_row(dict(zip(mtls, curve)))
 
     print(f"{'job':>22} {'paper':>5} {'ours':>4} {'knob':>8} "
           f"{'DNNScaler':>10} {'Clipper':>9} {'speedup':>8} {'p95/SLO':>8}")

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import numpy as np
+
 from repro.core.clipper import ClipperController
 from repro.core.matrix_completion import LatencyEstimator
 from repro.core.profiler import Profiler, ProfileResult
@@ -53,6 +55,16 @@ class DNNScalerController:
                                        primary=self.profile.approach,
                                        max_bs=max_bs, max_mtl=max_mtl,
                                        decision_interval=decision_interval)
+            self._surface = None
+            if hasattr(executor, "price_surface"):
+                # 2-D analogue of the matrix-completion seed: price the
+                # whole knob grid in ONE vectorized call and pin the
+                # model-infeasible frontier before the first probe
+                bs_vals = np.arange(1, max_bs + 1)
+                mtl_vals = np.arange(1, max_mtl + 1)
+                lat = executor.price_surface(bs_vals, mtl_vals)
+                self._surface = (bs_vals, mtl_vals, lat)
+                self.scaler.seed_surface(bs_vals, mtl_vals, lat)
         elif picked == "B":
             self.scaler = BatchScaler(slo_s, max_bs=max_bs,
                                       decision_interval=decision_interval)
@@ -69,8 +81,13 @@ class DNNScalerController:
         return "H" if self.mode == "hybrid" else self.mode
 
     def set_slo(self, slo_s: float) -> None:
+        changed = slo_s != self.slo
         self.slo = slo_s
         self.scaler.set_slo(slo_s)
+        if changed and getattr(self, "_surface", None) is not None:
+            # set_slo cleared all pins; re-derive the infeasible frontier
+            # for the new SLO from the already-priced surface (no re-pricing)
+            self.scaler.seed_surface(*self._surface)
 
     def action(self) -> Action:
         return self.scaler.action()

@@ -12,6 +12,8 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+import numpy as np
+
 from repro.serving.engine import Action
 
 ALPHA = 0.85
@@ -269,6 +271,42 @@ class HybridScaler:
 
     def action(self) -> Action:
         return Action(bs=self.bs, mtl=self.mtl)
+
+    # -- surface seeding ----------------------------------------------------
+    def seed_surface(self, bs_values, mtl_values, latency_s) -> int:
+        """Seed the dominance pins from a priced (bs, mtl) latency surface.
+
+        `latency_s[i, j]` is the estimated MEAN latency at
+        (bs_values[i], mtl_values[j]) — e.g. `SimExecutor.price_surface`,
+        the 2-D analogue of the matrix-completion MTL curve.  Points whose
+        mean already exceeds the SLO can never satisfy p95 <= SLO, so their
+        minimal (lower-left) frontier is pinned permanently; dominance
+        pruning in `is_pinned` rules out each frontier point's whole
+        upper-right quadrant without a single wasted probe.  Also tightens
+        the BS ceiling `_hi` at the current MTL.  Returns the number of
+        frontier pins installed."""
+        lat = np.asarray(latency_s, np.float64)
+        bs_values = [int(b) for b in bs_values]
+        mtl_values = [int(m) for m in mtl_values]
+        bad = lat > self.slo
+        pins = 0
+        prev_first = len(bs_values)      # first-bad row of the previous MTL
+        for j, m in enumerate(mtl_values):
+            rows = np.nonzero(bad[:, j])[0]
+            if rows.size == 0:
+                continue
+            i = int(rows[0])             # latency is monotone in bs: the
+            if i < prev_first:           # first bad bs rules the column out
+                self._dom_counts[(bs_values[i], m)] = self.persist_pins
+                pins += 1
+                prev_first = i
+        # BS ceiling at the MTL we are sitting on (conservative for lower
+        # MTLs by monotonicity, exactly like the ceiling kept by _grow_mtl)
+        if self.mtl in mtl_values:
+            rows = np.nonzero(bad[:, mtl_values.index(self.mtl)])[0]
+            if rows.size:
+                self._hi = min(self._hi, max(bs_values[int(rows[0])] - 1, 1))
+        return pins
 
     # -- known-bad (2-D, amnesty-windowed) ----------------------------------
     def is_pinned(self, bs: int, mtl: int) -> bool:

@@ -1,4 +1,9 @@
-"""Jit'd public wrapper for the decode-attention Pallas kernel."""
+"""Jit'd public wrapper for the decode-attention Pallas kernel.
+
+``block_k=None`` consults the autotune cache (``repro.perf.autotune``)
+for the best-known tiling of this (shape-class, dtype, backend); an empty
+cache falls back to the historical 256 default.  Explicit kwargs win.
+"""
 
 from __future__ import annotations
 
@@ -9,15 +14,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import decode_attention_fwd
+from repro.perf import autotune
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("window", "logit_cap", "block_k", "interpret"))
+DEFAULT_BLOCK_K = autotune.DEFAULTS["decode_attention"]["block_k"]
+
+
+def _resolve_block_k(block_k: Optional[int], dtype, BKV: int, G: int,
+                     hd: int, S: int) -> int:
+    if block_k is not None:
+        return block_k
+    cfg = autotune.lookup("decode_attention", dtype, BKV=BKV, G=G, hd=hd, S=S)
+    return cfg["block_k"] if cfg else DEFAULT_BLOCK_K
+
+
 def decode_attention(
     q: jax.Array,        # (B, H, hd)
     k_cache: jax.Array,  # (B, S, KV, hd)
@@ -26,8 +40,31 @@ def decode_attention(
     *,
     window: Optional[int] = None,
     logit_cap: Optional[float] = None,
-    block_k: int = 256,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+) -> jax.Array:
+    block_k = _resolve_block_k(block_k, q.dtype,
+                               q.shape[0] * k_cache.shape[2],
+                               q.shape[1] // k_cache.shape[2], q.shape[2],
+                               k_cache.shape[1])
+    return _decode_attention(q, k_cache, v_cache, pos, window=window,
+                             logit_cap=logit_cap, block_k=block_k,
+                             interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "logit_cap", "block_k", "interpret"))
+def _decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos,
+    *,
+    window: Optional[int],
+    logit_cap: Optional[float],
+    block_k: int,
+    interpret: Optional[bool],
 ) -> jax.Array:
     if interpret is None:
         interpret = _on_cpu()
@@ -53,8 +90,6 @@ def decode_attention(
     return out.reshape(B, KV, G, hd).reshape(B, H, hd)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("window", "logit_cap", "block_k", "interpret"))
 def decode_attention_kvmajor(
     q: jax.Array,        # (B, H, hd)
     k_cache: jax.Array,  # (B, KV, S, hd) — the model's attention-native layout
@@ -63,11 +98,33 @@ def decode_attention_kvmajor(
     *,
     window=None,
     logit_cap=None,
-    block_k: int = 256,
+    block_k: Optional[int] = None,
     interpret=None,
 ):
     """Like decode_attention but takes the (B, KV, S, hd) cache layout the
     model uses — a pure reshape, no transpose."""
+    block_k = _resolve_block_k(block_k, q.dtype,
+                               q.shape[0] * k_cache.shape[1],
+                               q.shape[1] // k_cache.shape[1], q.shape[2],
+                               k_cache.shape[2])
+    return _decode_attention_kvmajor(q, k_cache, v_cache, pos, window=window,
+                                     logit_cap=logit_cap, block_k=block_k,
+                                     interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "logit_cap", "block_k", "interpret"))
+def _decode_attention_kvmajor(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos,
+    *,
+    window,
+    logit_cap,
+    block_k: int,
+    interpret,
+):
     if interpret is None:
         interpret = _on_cpu()
     B, H, hd = q.shape

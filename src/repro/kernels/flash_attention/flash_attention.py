@@ -42,7 +42,8 @@ NEG_INF = -2.0 ** 30
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             block_q: int, block_k: int, nk: int, causal: bool,
             window: Optional[int], logit_cap: Optional[float],
-            q_offset: int, scale: float, groups: int):
+            q_offset: int, scale: float, groups: int,
+            kv_len: Optional[int]):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -63,6 +64,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         run = jnp.asarray(k0 <= q0 + block_q - 1)
     if window is not None:
         run = jnp.logical_and(run, k0 + block_k - 1 > q0 - window)
+    if kv_len is not None and kv_len < nk * block_k:
+        # tiles entirely inside the key padding contribute nothing
+        run = jnp.logical_and(jnp.asarray(run), k0 < kv_len)
 
     @pl.when(run if not isinstance(run, bool) else True)
     def _compute():
@@ -81,6 +85,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             mask = mask & (kpos <= qpos)
         if window is not None:
             mask = mask & (kpos > qpos - window)
+        if kv_len is not None and kv_len < nk * block_k:
+            mask = mask & (kpos < kv_len)     # zero-padded keys are invalid
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, :1]
@@ -114,6 +120,7 @@ def flash_attention_fwd(
     block_q: int,
     block_k: int,
     interpret: bool,
+    kv_len: Optional[int] = None,
 ) -> jax.Array:
     BKV, G, Tq, hd = q.shape
     Tk = k.shape[1]
@@ -125,7 +132,7 @@ def flash_attention_fwd(
     kernel = functools.partial(
         _kernel, block_q=block_q, block_k=block_k, nk=nk, causal=causal,
         window=window, logit_cap=logit_cap, q_offset=q_offset, scale=scale,
-        groups=G)
+        groups=G, kv_len=kv_len)
 
     if _VMEM is not None:
         scratch = [

@@ -1,7 +1,14 @@
 """Jit'd public wrapper for the flash-attention Pallas kernel.
 
 Accepts model-layout tensors (B, T, H, hd) / (B, S, KV, hd), handles GQA
-folding, padding to block multiples, and interpret-mode selection (CPU).
+folding, padding to block multiples (pad keys are masked via a static
+``kv_len``, so non-divisible lengths work for causal AND non-causal
+attention), and interpret-mode selection (CPU).
+
+Tile sizes: explicit ``block_q``/``block_k`` kwargs always win; when left
+None the autotune cache (``repro.perf.autotune``) supplies the best-known
+tiling for this (shape-class, dtype, backend), falling back to the
+historical 128/128 defaults on a cache miss.
 """
 
 from __future__ import annotations
@@ -13,16 +20,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.perf import autotune
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("causal", "window", "logit_cap", "q_offset",
-                     "block_q", "block_k", "interpret"))
+DEFAULT_BLOCK_Q = autotune.DEFAULTS["flash_attention"]["block_q"]
+DEFAULT_BLOCK_K = autotune.DEFAULTS["flash_attention"]["block_k"]
+
+
 def flash_attention(
     q: jax.Array,                # (B, Tq, H, hd)
     k: jax.Array,                # (B, Tk, KV, hd)
@@ -32,9 +40,41 @@ def flash_attention(
     window: Optional[int] = None,
     logit_cap: Optional[float] = None,
     q_offset: int = 0,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+) -> jax.Array:
+    if block_q is None or block_k is None:
+        cfg = autotune.lookup(
+            "flash_attention", q.dtype, BKV=q.shape[0] * k.shape[2],
+            G=q.shape[2] // k.shape[2], hd=q.shape[3],
+            Tq=q.shape[1], Tk=k.shape[1], causal=causal)
+        if block_q is None:
+            block_q = cfg["block_q"] if cfg else DEFAULT_BLOCK_Q
+        if block_k is None:
+            block_k = cfg["block_k"] if cfg else DEFAULT_BLOCK_K
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            logit_cap=logit_cap, q_offset=q_offset,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_cap", "q_offset",
+                     "block_q", "block_k", "interpret"))
+def _flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    logit_cap: Optional[float],
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    interpret: Optional[bool],
 ) -> jax.Array:
     if interpret is None:
         interpret = _on_cpu()
@@ -58,22 +98,14 @@ def flash_attention(
     k3 = kp.transpose(0, 2, 1, 3).reshape(B * KV, Tkp, hd)
     v3 = vp.transpose(0, 2, 1, 3).reshape(B * KV, Tkp, hd)
 
-    # Padded K positions are masked: causal masking handles the q-pad rows;
-    # for k-pad we rely on kpos > q_max when causal.  For non-causal inputs we
-    # must mask explicitly — emulate by setting window/causal masks upstream;
-    # here pad keys get position >= Tk and a -inf via explicit valid check:
-    if pad_k and not causal:
-        # cheap fallback: zero-pad keys produce uniform logits; mask by
-        # appending a window over valid length instead — handled by padding
-        # with NEG values in k is incorrect, so use causal=False + valid mask
-        # path in the reference. For simplicity, require no k-pad when
-        # non-causal (callers pass block-divisible encoder lengths).
-        raise ValueError("non-causal flash kernel requires Tk % block_k == 0")
-
+    # Padded K positions are masked inside the kernel via the static
+    # `kv_len`: pad keys get position >= Tk and a NEG_INF logit, which the
+    # online softmax then ignores — correct for causal and non-causal alike
+    # (causal alone also guards them when q_offset + Tq <= Tk).
     out = flash_attention_fwd(
         q4, k3, v3, causal=causal, window=window, logit_cap=logit_cap,
         q_offset=q_offset, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        interpret=interpret, kv_len=Tk if pad_k else None)
     out = out.reshape(B, KV, G, Tqp, hd).transpose(0, 3, 1, 2, 4).reshape(
         B, Tqp, H, hd)
     return out[:, :Tq]

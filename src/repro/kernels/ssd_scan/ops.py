@@ -1,20 +1,38 @@
-"""Jit'd public wrapper for the SSD-scan Pallas kernel (model layout)."""
+"""Jit'd public wrapper for the SSD-scan Pallas kernel (model layout).
+
+``chunk=None`` consults the autotune cache (``repro.perf.autotune``) for
+the best-known chunk of this (shape-class, dtype, backend) and degrades
+it to the largest divisor of T when the tuned value does not divide the
+actual sequence length; an empty cache falls back to the historical 128.
+Explicit kwargs win (and must divide T, as before).
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+from repro.perf import autotune
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+DEFAULT_CHUNK = autotune.DEFAULTS["ssd_scan"]["chunk"]
+
+
+def _largest_dividing_chunk(T: int, chunk: int) -> int:
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    return chunk
+
+
 def ssd_scan(
     x: jax.Array,     # (B, T, H, P)
     dt: jax.Array,    # (B, T, H)  (already softplus'd)
@@ -22,10 +40,29 @@ def ssd_scan(
     Bm: jax.Array,    # (B, T, N)
     Cm: jax.Array,    # (B, T, N)
     *,
-    chunk: int = 128,
+    chunk: Optional[int] = None,
     interpret=None,
 ):
     """Returns (y (B,T,H,P) f32, final_state (B,H,P,N) f32)."""
+    if chunk is None:
+        cfg = autotune.lookup("ssd_scan", x.dtype, H=x.shape[2],
+                              P=x.shape[3], N=Bm.shape[2], T=x.shape[1])
+        chunk = _largest_dividing_chunk(
+            x.shape[1], cfg["chunk"] if cfg else DEFAULT_CHUNK)
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int,
+    interpret=None,
+):
     if interpret is None:
         interpret = _on_cpu()
     B, T, H, P = x.shape

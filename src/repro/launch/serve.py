@@ -28,13 +28,14 @@ from repro.serving.workload import PAPER_JOBS
 
 
 def build_library(estimator: LatencyEstimator, exclude_id: int) -> None:
-    """Seed matrix completion with 'historically profiled' jobs."""
+    """Seed matrix completion with 'historically profiled' jobs (each MTL
+    curve priced in one vectorized mt_latency_grid call)."""
+    mtls = list(range(1, 11))
     for j in PAPER_JOBS[:8]:
         if j.job_id == exclude_id:
             continue
-        prof = j.profile()
-        estimator.add_library_row(
-            {m: dm.mt_latency(dm.TESLA_P40, prof, 1, m) for m in range(1, 11)})
+        curve = dm.mt_latency_curve(dm.TESLA_P40, j.profile(), 1, mtls)
+        estimator.add_library_row(dict(zip(mtls, curve)))
 
 
 def make_controller(name: str, executor, slo_s: float, job_id: int = -1,
@@ -89,7 +90,17 @@ def main() -> None:
     ap.add_argument("--slo-ms", type=float, default=None)
     ap.add_argument("--steps", type=int, default=500)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune Pallas tile sizes on cache miss (fills the "
+                         "persistent autotune cache; otherwise cache-only)")
+    ap.add_argument("--autotune-cache-dir", default=None, metavar="DIR",
+                    help="autotune cache location (default: "
+                         "$REPRO_AUTOTUNE_CACHE or ./.autotune_cache)")
     args = ap.parse_args()
+
+    from repro.perf import autotune
+    autotune.configure(cache_dir=args.autotune_cache_dir,
+                       tune_on_miss=args.autotune or None)
 
     if args.cluster:
         from repro.serving.cluster import run_paper_cluster
@@ -157,6 +168,12 @@ def main() -> None:
     print(f"  throughput {s['throughput']:.1f}/s  p95 {s['p95_s']*1e3:.1f}ms "
           f"(SLO {slo*1e3:.1f}ms)  attainment {s['slo_attainment']:.3f}  "
           f"power_eff {s['power_efficiency']:.2f}/W")
+    if hasattr(executor, "cache_stats"):
+        cs = executor.cache_stats
+        print(f"  exec-cache hits {cs.hits} misses {cs.misses} "
+              f"(hit rate {cs.hit_rate:.2f})  compile "
+              f"{cs.compile_time_s:.2f}s charged "
+              f"{s['compile_stall_s']:.2f}s")
 
 
 if __name__ == "__main__":

@@ -34,11 +34,9 @@ import dataclasses
 import heapq
 from typing import Callable, List, Optional, Sequence
 
-import numpy as np
-
 from repro.serving import device_model as dm
 from repro.serving import tenancy
-from repro.serving.engine import Action
+from repro.serving.engine import Action, OpenLoopQueue, reconfig_stall
 from repro.serving.executor import SimExecutor
 from repro.serving.metrics import RunAccumulator, TailLatencyWindow
 
@@ -124,14 +122,17 @@ class _JobState:
         self.clock = 0.0
         self.prev = Action(bs=1, mtl=1)
         self.stall_time = 0.0
-        self.arrival_rate = arrival_rate
-        self.max_queue = max_queue
-        self.queue: list = []             # arrival timestamps (open loop)
-        self.rng = (np.random.default_rng(seed)
-                    if arrival_rate is not None else None)
-        self.submitted = 0
+        # open-loop mechanics (arrival window, overflow, conservation) are
+        # the shared OpenLoopQueue helper — same code path as OpenLoopEngine
+        self.oq = (OpenLoopQueue(lambda t, r=arrival_rate: r,
+                                 max_queue=max_queue, seed=seed)
+                   if arrival_rate is not None else None)
+        self.submitted = 0                # closed-loop accounting
         self.completed = 0
-        self.rejected = 0
+
+    @property
+    def queue(self) -> list:
+        return self.oq.queue if self.oq is not None else []
 
 
 class ClusterEngine:
@@ -150,6 +151,7 @@ class ClusterEngine:
         self.placement = place(self.jobs, self.fleet)
         counts = [self.placement.count(d) for d in range(len(self.fleet))]
         self.stall_time = 0.0
+        self.compile_stall_s = 0.0
         self.event_log: list = []         # (global time, job_id) pop order
 
         self.states: List[_JobState] = []
@@ -191,42 +193,34 @@ class ClusterEngine:
             ctrl.set_slo(st.job.slo_s)
         act = ctrl.action()
         win_start = st.clock        # arrivals keep coming during any stall
-        if act.mtl != st.prev.mtl:
-            delta = act.mtl - st.prev.mtl
-            cost = (self.instance_launch_s * max(delta, 0) +
-                    self.instance_kill_s * max(-delta, 0))
+        cost = reconfig_stall(st.prev, act, self.instance_launch_s,
+                              self.instance_kill_s)
+        if cost:
             st.clock += cost
             st.stall_time += cost
             self.stall_time += cost
             st.acc.total_time += cost
-            st.window.reset()
-        elif act.bs != st.prev.bs:
-            st.window.reset()            # re-measure the tail at the new BS
+        if (act.bs, act.mtl) != (st.prev.bs, st.prev.mtl):
+            st.window.reset()            # re-measure the tail at the new knobs
 
         res = st.executor.run_step(act.bs, act.mtl)
-        t0, t1 = st.clock, st.clock + res["step_time"]
+        comp = res.get("compile_time", 0.0)
+        if comp:                         # AOT compile = stall, like a launch
+            st.clock += comp
+            st.acc.total_time += comp
+            st.acc.compile_stall_s += comp
+            self.compile_stall_s += comp
+        t1 = st.clock + res["step_time"]
         slo = st.job.slo_s
-        if st.rng is not None:           # open loop: queue + conservation
-            # the arrival window spans the launch/kill stall too — the
-            # outside world does not pause while instances restart, and
+        if st.oq is not None:            # open loop: queue + conservation
+            # the arrival window spans the launch/kill/compile stall too —
+            # the outside world does not pause while instances restart, and
             # served latencies (t1 - ts) must include that wait
-            window = t1 - win_start
-            n_arr = int(st.rng.poisson(st.arrival_rate * window))
-            st.submitted += n_arr
-            if n_arr:
-                st.queue.extend(np.sort(
-                    win_start + st.rng.random(n_arr) * window))
-            if len(st.queue) > st.max_queue:
-                drop = len(st.queue) - st.max_queue
-                st.rejected += drop
-                st.queue = st.queue[drop:]
-            cap = act.bs * act.mtl
-            served, st.queue = st.queue[:cap], st.queue[cap:]
+            served, lats = st.oq.step(win_start, t1, act.bs * act.mtl)
             st.completed += len(served)
             st.acc.record_step(
                 items=len(served), step_time=res["step_time"],
-                power_w=res["power_w"],
-                request_latencies=[t1 - ts for ts in served], slo=slo)
+                power_w=res["power_w"], request_latencies=lats, slo=slo)
         else:                            # closed loop: every item completes
             st.submitted += res["items"]
             st.completed += res["items"]
@@ -280,8 +274,11 @@ class ClusterEngine:
                 "slo_attainment": float(s["slo_attainment"]),
                 "throughput": float(s["throughput"]),
                 "stall_s": float(st.stall_time),
-                "submitted": st.submitted, "completed": st.completed,
-                "rejected": st.rejected, "backlog": len(st.queue),
+                "submitted": (st.oq.submitted if st.oq is not None
+                              else st.submitted),
+                "completed": st.completed,
+                "rejected": st.oq.rejected if st.oq is not None else 0,
+                "backlog": st.oq.backlog if st.oq is not None else 0,
             })
         makespan = float(max((st.clock for st in self.states), default=0.0))
         completed = sum(st.completed for st in self.states)
@@ -295,6 +292,7 @@ class ClusterEngine:
                 "aggregate_throughput":
                     completed / makespan if makespan else 0.0,
                 "total_stall_s": float(self.stall_time),
+                "compile_stall_s": float(self.compile_stall_s),
                 "min_attainment":
                     min((r["slo_attainment"] for r in per_job), default=1.0),
                 "feasible_jobs": len(feasible),
@@ -321,12 +319,12 @@ def paper_controller_factory(mode: str = "auto", *, max_mtl: int = 10,
     from repro.core.matrix_completion import LatencyEstimator
     from repro.serving.workload import PAPER_JOBS
 
+    mtls = list(range(1, max_mtl + 1))
     library = []
     for j in PAPER_JOBS[:library_jobs]:
-        prof = j.profile()
-        library.append((j.job_id,
-                        {m: dm.mt_latency(dm.TESLA_P40, prof, 1, m)
-                         for m in range(1, max_mtl + 1)}))
+        # whole MTL curve priced in one vectorized call (mt_latency_grid)
+        curve = dm.mt_latency_curve(dm.TESLA_P40, j.profile(), 1, mtls)
+        library.append((j.job_id, dict(zip(mtls, curve))))
 
     def make(job, executor):
         if mode == "clipper":

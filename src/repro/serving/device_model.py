@@ -86,20 +86,20 @@ class JobProfile:
         return self.gpu1_ms / (self.host_ms + self.gpu1_ms)
 
 
-def rho(bs: int) -> float:
+def rho(bs):
+    """Copy-pressure factor; polymorphic over scalars and np arrays."""
     return 1.0 + bs / 128.0
 
 
 def gpu_img_ms(prof: JobProfile, bs: int, dev: Device) -> float:
-    return max(prof.steady_ms(dev), prof.gpu1_ms * bs ** (-prof.amort))
+    return float(gpu_img_ms_grid(prof, bs, dev))
 
 
 def batch_latency(dev: Device, prof: JobProfile, bs: int,
                   share: float = 1.0) -> float:
     """Seconds for one batch of `bs` on one instance (MTL=1).  `share` < 1
     prices a fractional device slice (TPU submesh tenancy)."""
-    d = dev if share == 1.0 else dev.share(share)
-    return bs * (prof.host_ms * rho(bs) + gpu_img_ms(prof, bs, d)) / 1e3
+    return float(batch_latency_grid(dev, prof, bs, share=share))
 
 
 def step_latency(dev: Device, prof: JobProfile, bs: int,
@@ -108,24 +108,72 @@ def step_latency(dev: Device, prof: JobProfile, bs: int,
 
     `share` < 1 prices a submesh / device slice (TPU tenancy, cluster
     co-location).  `t_step` equals batch_latency(dev, prof, bs, share)."""
-    d = dev if share == 1.0 else dev.share(share)
-    t_host = bs * prof.host_ms * rho(bs) / 1e3
-    t_gpu = bs * gpu_img_ms(prof, bs, d) / 1e3
-    return {"t_step": t_host + t_gpu, "t_host": t_host, "t_gpu": t_gpu,
-            "share": share}
+    g = step_latency_grid(dev, prof, bs, share=share)
+    return {"t_step": float(g["t_step"]), "t_host": float(g["t_host"]),
+            "t_gpu": float(g["t_gpu"]), "share": share}
 
 
 def mt_latency(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
     """Per-instance step latency (seconds) with mtl co-located instances."""
-    if mtl <= 1:
+    if mtl <= 1:                 # no co-residents: identical to one batch
         return batch_latency(dev, prof, bs)
-    host = bs * prof.host_ms * rho(bs) * (1.0 + CHI_HOST * (mtl - 1))
-    gpu = bs * gpu_img_ms(prof, bs, dev) * mtl * (1.0 + EPS_MT * (mtl - 1))
-    return (host + gpu) / 1e3
+    return float(mt_latency_grid(dev, prof, [bs], [mtl])[0, 0])
 
 
 def mt_throughput(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
     return mtl * bs / mt_latency(dev, prof, bs, mtl)
+
+
+# ---------------------------------------------------------------------------
+# Batched pricing: whole (bs, mtl) grids in one vectorized call — used by
+# HybridScaler surface seeding, matrix-completion library seeding, and the
+# Table-5 profile fit, instead of Python double loops.  These ARE the
+# pricing formulas; the scalar functions above are size-1 views of them.
+# ---------------------------------------------------------------------------
+def gpu_img_ms_grid(prof: JobProfile, bs, dev: Device) -> np.ndarray:
+    bs = np.asarray(bs, np.float64)
+    return np.maximum(prof.steady_ms(dev), prof.gpu1_ms * bs ** (-prof.amort))
+
+
+def batch_latency_grid(dev: Device, prof: JobProfile, bs,
+                       share: float = 1.0) -> np.ndarray:
+    """`batch_latency` over an array of batch sizes (seconds)."""
+    d = dev if share == 1.0 else dev.share(share)
+    bs = np.asarray(bs, np.float64)
+    return bs * (prof.host_ms * rho(bs) + gpu_img_ms_grid(prof, bs, d)) / 1e3
+
+
+def step_latency_grid(dev: Device, prof: JobProfile, bs,
+                      share: float = 1.0) -> dict:
+    """`step_latency` over an array of batch sizes (dict of arrays)."""
+    d = dev if share == 1.0 else dev.share(share)
+    bs = np.asarray(bs, np.float64)
+    t_host = bs * prof.host_ms * rho(bs) / 1e3
+    t_gpu = bs * gpu_img_ms_grid(prof, bs, d) / 1e3
+    return {"t_step": t_host + t_gpu, "t_host": t_host, "t_gpu": t_gpu,
+            "share": share}
+
+
+def mt_latency_grid(dev: Device, prof: JobProfile, bs, mtl) -> np.ndarray:
+    """Per-instance step latency (seconds) over the full outer grid —
+    shape (len(bs), len(mtl)); row i, column j prices (bs[i], mtl[j]).
+    The mtl=1 column equals `batch_latency_grid` term for term."""
+    bs = np.asarray(bs, np.float64)[:, None]
+    m = np.asarray(mtl, np.float64)[None, :]
+    host = prof.host_ms * rho(bs) * (1.0 + CHI_HOST * (m - 1.0))
+    gpu = gpu_img_ms_grid(prof, bs, dev) * m * (1.0 + EPS_MT * (m - 1.0))
+    return bs * (host + gpu) / 1e3
+
+
+def mt_latency_curve(dev: Device, prof: JobProfile, bs: int, mtls) -> np.ndarray:
+    """1-D convenience: latency at one batch size over an array of MTLs."""
+    return mt_latency_grid(dev, prof, [bs], mtls)[0]
+
+
+def mt_throughput_grid(dev: Device, prof: JobProfile, bs, mtl) -> np.ndarray:
+    bs_ = np.asarray(bs, np.float64)[:, None]
+    m_ = np.asarray(mtl, np.float64)[None, :]
+    return (m_ * bs_) / mt_latency_grid(dev, prof, bs, mtl)
 
 
 def power(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
@@ -210,10 +258,14 @@ def _model_thr(host, gpu1, amort, flops, dev) -> tuple:
 
 @functools.lru_cache(maxsize=None)
 def _fit_profile(dnn: str, dataset: str) -> tuple:
-    """Grid-fit (host, gpu1, amort) to the Table-5 triple (log-space MSE)."""
+    """Grid-fit (host, gpu1, amort) to the Table-5 triple (log-space MSE).
+
+    The whole (host_frac x amort) grid is priced in one vectorized shot
+    (the formulas of `_model_thr` element for element); argmin over the
+    row-major error surface keeps the first minimum, matching the original
+    sequential scan's tie-breaking."""
     params_m, gflops, h0, g0frac, a0 = NET_SPECS[dnn]
     target = TABLE5.get((dnn, dataset))
-    base_ms_default = h0 + g0frac * h0 / (1 - g0frac + 1e-9)
     if target is None:
         gpu1 = h0 * g0frac / (1 - g0frac)
         return h0, gpu1, a0
@@ -221,16 +273,22 @@ def _fit_profile(dnn: str, dataset: str) -> tuple:
     base_ms = 1e3 / t[0]
     dev = TESLA_P40
     flops = gflops * 1e9
-    best, best_err = None, np.inf
-    for host_frac in np.linspace(0.05, 0.95, 46):
-        host = base_ms * host_frac
-        gpu1 = base_ms - host
-        for amort in np.linspace(0.0, 0.95, 39):
-            m = np.array(_model_thr(host, gpu1, amort, flops, dev))
-            err = np.sum(np.log(m / t) ** 2)
-            if err < best_err:
-                best, best_err = (host, gpu1, amort), err
-    return best
+    steady = max(flops / (dev.peak_flops * STEADY_EFF),
+                 1e8 / dev.hbm_bw / 32.0) * 1e3
+    host = base_ms * np.linspace(0.05, 0.95, 46)[:, None]    # (46, 1)
+    gpu1 = base_ms - host
+    amort = np.linspace(0.0, 0.95, 39)[None, :]              # (1, 39)
+    base = 1e3 / (host + gpu1)
+    lat8 = (host * (1.0 + 1 / 128.0) * (1.0 + CHI_HOST * 7)
+            + np.maximum(steady, gpu1) * 8 * (1.0 + EPS_MT * 7)) / 1e3
+    mt8 = 8 * 1 / lat8
+    lat32 = 32 * (host * (1.0 + 32 / 128.0)
+                  + np.maximum(steady, gpu1 * 32.0 ** (-amort))) / 1e3
+    b32 = 32.0 / (lat32 * 1e3) * 1e3
+    err = (np.log(base / t[0]) ** 2 + np.log(mt8 / t[1]) ** 2
+           + np.log(b32 / t[2]) ** 2)
+    i, j = np.unravel_index(np.argmin(err), err.shape)
+    return float(host[i, 0]), float(gpu1[i, 0]), float(amort[0, j])
 
 
 def paper_profile(name: str, dataset: str = "imagenet") -> JobProfile:

@@ -10,13 +10,23 @@ metrics accumulator.  Controllers (repro.core) expose:
 
 Dynamic batch-size changes are free (the paper's dynamic batch sizing);
 MTL changes cost `instance_launch_s` per added and `instance_kill_s` per
-removed instance.
+removed instance.  Executors that compile on demand (RealExecutor's AOT
+cache) report the compile wall time in ``result["compile_time"]``; it is
+charged to the engine clock exactly like an instance-launch stall, so
+adaptation cost is modeled rather than hidden.
+
+The per-step open-loop mechanics (stall accounting, the stall-spanning
+arrival window, bounded-queue overflow) are shared with
+``serving.cluster.ClusterEngine`` via ``reconfig_stall`` and
+``OpenLoopQueue`` — one implementation, patched once.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Optional
+
+import numpy as np
 
 from repro.serving.metrics import RunAccumulator, TailLatencyWindow
 
@@ -25,6 +35,56 @@ from repro.serving.metrics import RunAccumulator, TailLatencyWindow
 class Action:
     bs: int = 1
     mtl: int = 1
+
+
+def reconfig_stall(prev: Action, act: Action, launch_s: float,
+                   kill_s: float) -> float:
+    """Stall seconds for moving prev -> act.  BS changes are free (dynamic
+    batch sizing); MTL changes cost per instance launched/killed."""
+    if act.mtl == prev.mtl:
+        return 0.0
+    delta = act.mtl - prev.mtl
+    return launch_s * max(delta, 0) + kill_s * max(-delta, 0)
+
+
+class OpenLoopQueue:
+    """Open-loop request bookkeeping shared by OpenLoopEngine and
+    ClusterEngine: a (possibly time-varying) Poisson arrival process, the
+    stall-spanning arrival window, bounded-queue overflow (oldest dropped
+    first), and exact request conservation —
+    ``submitted == completed + rejected + backlog`` at every step."""
+
+    def __init__(self, rate_fn: Callable[[float], float], *,
+                 max_queue: int, seed: int = 0):
+        self.rate_fn = rate_fn
+        self.rng = np.random.default_rng(seed)
+        self.queue: list = []            # arrival timestamps
+        self.submitted = 0
+        self.rejected = 0
+        self.max_queue = max_queue
+
+    @property
+    def backlog(self) -> int:
+        return len(self.queue)
+
+    def step(self, win_start: float, t_end: float, capacity: int) -> tuple:
+        """Arrivals over [win_start, t_end] — the window spans any
+        launch/kill or compile stall, because the outside world does not
+        pause while instances restart — then overflow, then serve up to
+        `capacity` oldest requests.  Returns (served timestamps,
+        end-to-end latencies)."""
+        window = t_end - win_start
+        n_arr = int(self.rng.poisson(self.rate_fn(win_start) * window))
+        self.submitted += n_arr
+        if n_arr:
+            self.queue.extend(np.sort(
+                win_start + self.rng.random(n_arr) * window))
+        if len(self.queue) > self.max_queue:
+            drop = len(self.queue) - self.max_queue
+            self.rejected += drop
+            self.queue = self.queue[drop:]
+        served, self.queue = self.queue[:capacity], self.queue[capacity:]
+        return served, [t_end - ts for ts in served]
 
 
 class ServingEngine:
@@ -47,6 +107,26 @@ class ServingEngine:
             return self.slo_schedule(self.acc.total_time)
         return self.base_slo
 
+    def _charge_reconfig(self, prev: Action, act: Action) -> None:
+        """Shared stall accounting: MTL moves stall the service; any knob
+        change invalidates the tail window (the paper 'processes a certain
+        number of batches and measures their tail latency' per point)."""
+        cost = reconfig_stall(prev, act, self.instance_launch_s,
+                              self.instance_kill_s)
+        if cost:
+            self.acc.total_time += cost
+            self.reconfig_time += cost
+        if (act.bs, act.mtl) != (prev.bs, prev.mtl):
+            self.window.reset()
+
+    def _charge_compile(self, res: dict) -> float:
+        """AOT compile time reported by the executor is an engine stall."""
+        comp = res.get("compile_time", 0.0)
+        if comp:
+            self.acc.total_time += comp
+            self.acc.compile_stall_s += comp
+        return comp
+
     def run(self, controller, *, max_steps: int = 2000,
             sim_time_limit: Optional[float] = None) -> RunAccumulator:
         prev = Action(bs=1, mtl=1)
@@ -55,22 +135,9 @@ class ServingEngine:
             if hasattr(controller, "set_slo"):
                 controller.set_slo(slo)
             act = controller.action()
-
-            # instance lifecycle cost
-            if act.mtl != prev.mtl:
-                delta = act.mtl - prev.mtl
-                cost = (self.instance_launch_s * max(delta, 0) +
-                        self.instance_kill_s * max(-delta, 0))
-                self.acc.total_time += cost
-                self.reconfig_time += cost
-                self.window.reset()
-            elif act.bs != prev.bs:
-                # dynamic batch sizing is free, but the tail window must be
-                # measured fresh at the new BS (the paper "processes a certain
-                # number of batches and measures their tail latency" per BS)
-                self.window.reset()
-
+            self._charge_reconfig(prev, act)
             res = self.executor.run_step(act.bs, act.mtl)
+            self._charge_compile(res)
             self.window.add_many(res["request_latencies"])
             self.acc.record_step(
                 items=res["items"], step_time=res["step_time"],
@@ -96,16 +163,25 @@ class OpenLoopEngine(ServingEngine):
 
     def __init__(self, executor, slo_s: float, *, arrival_rate: float,
                  burst_factor: float = 1.0, burst_period_s: float = 30.0,
-                 seed: int = 0, **kw):
+                 seed: int = 0, max_queue: int = 100_000, **kw):
         super().__init__(executor, slo_s, **kw)
         self.arrival_rate = arrival_rate
         self.burst_factor = burst_factor
         self.burst_period_s = burst_period_s
-        import numpy as _np
-        self._rng = _np.random.default_rng(seed)
-        self.queue: list = []          # arrival timestamps
-        self.dropped = 0
-        self.max_queue = 100_000
+        self.oq = OpenLoopQueue(self._rate, max_queue=max_queue, seed=seed)
+
+    # backwards-compatible views over the shared queue helper
+    @property
+    def queue(self) -> list:
+        return self.oq.queue
+
+    @property
+    def dropped(self) -> int:
+        return self.oq.rejected
+
+    @property
+    def max_queue(self) -> int:
+        return self.oq.max_queue
 
     def _rate(self, t: float) -> float:
         if self.burst_factor <= 1.0:
@@ -115,7 +191,6 @@ class OpenLoopEngine(ServingEngine):
 
     def run(self, controller, *, max_steps: int = 2000,
             sim_time_limit=None) -> RunAccumulator:
-        import numpy as np
         prev = Action(bs=1, mtl=1)
         for _ in range(max_steps):
             slo = self.current_slo()
@@ -123,32 +198,12 @@ class OpenLoopEngine(ServingEngine):
                 controller.set_slo(slo)
             act = controller.action()
             win_start = self.acc.total_time   # arrivals span any stall too
-            if act.mtl != prev.mtl:
-                delta = act.mtl - prev.mtl
-                cost = (self.instance_launch_s * max(delta, 0) +
-                        self.instance_kill_s * max(-delta, 0))
-                self.acc.total_time += cost
-                self.reconfig_time += cost
-                self.window.reset()
-            elif act.bs != prev.bs:
-                self.window.reset()
-
+            self._charge_reconfig(prev, act)
             res = self.executor.run_step(act.bs, act.mtl)
-            t0 = self.acc.total_time
-            t1 = t0 + res["step_time"]
-            # arrivals during this step INCLUDING the launch/kill stall —
-            # the outside world does not pause while instances restart
-            window = t1 - win_start
-            n_arr = int(self._rng.poisson(self._rate(win_start) * window))
-            self.queue.extend(
-                np.sort(win_start + self._rng.random(n_arr) * window)
-                if n_arr else [])
-            if len(self.queue) > self.max_queue:
-                self.dropped += len(self.queue) - self.max_queue
-                self.queue = self.queue[-self.max_queue:]
-            capacity = act.bs * act.mtl
-            served_ts, self.queue = self.queue[:capacity], self.queue[capacity:]
-            lats = [t1 - ts for ts in served_ts]
+            self._charge_compile(res)
+            t1 = self.acc.total_time + res["step_time"]
+            served_ts, lats = self.oq.step(win_start, t1,
+                                           act.bs * act.mtl)
             self.acc.record_step(
                 items=len(served_ts), step_time=res["step_time"],
                 power_w=res["power_w"], request_latencies=lats, slo=slo)

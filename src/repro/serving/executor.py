@@ -2,25 +2,37 @@
 
 SimExecutor — analytical device model (device_model.py) + latency noise;
   prices (BS, MTL) for a JobProfile on a Device or a TPU submesh plan.
+  ``price_surface`` prices a whole (bs, mtl) grid in one vectorized call
+  (HybridScaler seeding), and per-point means are memoized — the serving
+  loop stopped recomputing the same closed-form latency every step.
 
 RealExecutor — actually runs a jitted model on this host and measures wall
   clock.  Multi-tenancy is emulated by stacking MTL independent instance
   batches on a leading axis (vmap), which shares the host compute the way
   co-located GPU contexts share SMs.  Used for reduced models in tests,
   examples, and the real-execution benchmarks.
+
+  The executor is an AOT fast path: operating points are lowered and
+  compiled ahead of execution (``jit(...).lower().compile()``), batch
+  shapes are bucketed so scaler probes of nearby (bs, mtl) points reuse
+  one executable instead of recompiling, and every compile's wall time is
+  reported in ``result["compile_time"]`` so the engine charges it to the
+  service clock like an instance-launch stall.  Cache hit/miss counters
+  live in ``metrics.ExecCacheStats``; steady-state probing must show zero
+  misses after warmup.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import device_model as dm
 from repro.serving import tenancy
+from repro.serving.metrics import ExecCacheStats
 
 
 class SimExecutor:
@@ -33,9 +45,19 @@ class SimExecutor:
         self.sampler = dm.LatencySampler(seed=seed)
         self.mesh_shape = mesh_shape   # TPU mode: tenancy = submesh split
         self.clock = 0.0
+        self._lat_cache: dict = {}     # (bs, mtl) -> mean latency (exact)
+        self._power_cache: dict = {}   # (bs, mtl) -> watts (deterministic)
 
     # -- pricing ------------------------------------------------------------
     def mean_latency(self, bs: int, mtl: int) -> float:
+        key = (bs, mtl)
+        lat = self._lat_cache.get(key)
+        if lat is None:
+            lat = self._price(bs, mtl)
+            self._lat_cache[key] = lat
+        return lat
+
+    def _price(self, bs: int, mtl: int) -> float:
         if self.mesh_shape is not None:
             # non-divisor MTLs over-partition (plan_at_least) instead of
             # returning inf — an inf step would poison the engine clock
@@ -47,6 +69,25 @@ class SimExecutor:
                                    share=p.share)["t_step"]
         return dm.mt_latency(self.device, self.profile, bs, mtl)
 
+    def price_surface(self, bs_values, mtl_values) -> np.ndarray:
+        """Mean-latency surface over the whole (bs, mtl) grid — one
+        vectorized call per tenancy plan instead of a Python double loop.
+        Shape (len(bs_values), len(mtl_values))."""
+        bs_values = np.asarray(bs_values)
+        if self.mesh_shape is None:
+            return dm.mt_latency_grid(self.device, self.profile,
+                                      bs_values, mtl_values)
+        cols = []
+        for m in mtl_values:
+            p = tenancy.plan_at_least(self.mesh_shape, int(m))
+            if p is None:
+                cols.append(np.full(len(bs_values), np.inf))
+            else:
+                cols.append(dm.step_latency_grid(
+                    self.device, self.profile, bs_values,
+                    share=p.share)["t_step"])
+        return np.stack(cols, axis=1)
+
     def fits(self, bs: int, mtl: int) -> bool:
         return dm.fits_memory(self.device, self.profile, bs, mtl)
 
@@ -57,62 +98,171 @@ class SimExecutor:
         lat = float(self.sampler.sample(mean, n=1)[0])
         self.clock += lat
         items = bs * mtl
+        power = self._power_cache.get((bs, mtl))
+        if power is None:
+            power = dm.power(self.device, self.profile, bs, mtl)
+            self._power_cache[(bs, mtl)] = power
         return {
             "step_time": lat,
             "items": items,
             "request_latencies": self.sampler.sample(lat, n=min(items, 64)),
-            "power_w": dm.power(self.device, self.profile, bs, mtl),
+            "power_w": power,
             "throughput": items / lat,
         }
+
+
+# Default batch buckets: dense at small sizes (where the scalers live), a
+# x1.5 / x2 ladder above — every (bs * mtl) rounds UP to one of these, so a
+# probing scaler touches O(log) distinct executables instead of one per point.
+DEFAULT_BUCKETS = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256,
+                   384, 512, 768, 1024, 1536, 2048, 3072, 4096)
+
+# fits() activation-estimate multiplier: per-item batch bytes amplified
+# through the network (activations, workspace, output buffers).
+ACT_MULT = 12.0
+PARAM_OVERHEAD = 1.3   # optimizer-free serving copy + allocator slack
 
 
 class RealExecutor:
     """Wall-clock executor over a jitted callable.
 
     `fn(params, batch)` consumes a batch pytree whose leaves have leading
-    dim = instances*bs (instances folded in by the caller via make_batch)."""
+    dim = instances*bs (instances folded in by the caller via make_batch).
+
+    AOT + bucketing: `run_step(bs, mtl)` rounds bs*mtl up to a bucket,
+    compiles that bucket's executable once ahead of time, and reuses it for
+    every operating point that lands in the bucket (padding rows are masked
+    out of the throughput accounting — only real items count).  With
+    `donate_batch=True` input buffers are donated to the executable and a
+    fresh device batch is staged per step (the real serving path, where
+    every request brings new data); by default the cached device batch is
+    reused and nothing is donated.
+    """
 
     def __init__(self, fn: Callable, params, make_batch: Callable,
-                 idle_w: float = 50.0, peak_w: float = 250.0):
+                 idle_w: float = 50.0, peak_w: float = 250.0, *,
+                 mem_bytes: Optional[float] = None,
+                 act_bytes_per_item: Optional[float] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 donate_batch: bool = False,
+                 aot: bool = True):
         self.fn = fn
         self.params = params
         self.make_batch = make_batch
         self.idle_w = idle_w
         self.peak_w = peak_w
-        self._compiled: dict = {}
+        self.mem_bytes = mem_bytes
+        self.act_bytes_per_item = act_bytes_per_item
+        self.buckets = tuple(sorted(buckets))
+        self.donate_batch = donate_batch
+        self.aot = aot
+        if donate_batch:
+            # wrap so donation applies regardless of whether fn is jitted
+            self._jfn = jax.jit(lambda p, b: fn(p, b), donate_argnums=(1,))
+        elif hasattr(fn, "lower"):
+            self._jfn = fn               # already jitted: AOT-lower directly
+        else:
+            self._jfn = jax.jit(fn)
+        self._exec: dict = {}            # bucket items -> (executable, batch)
+        self._param_bytes: Optional[float] = None
+        self.cache_stats = ExecCacheStats()
+        self._pending_compile = 0.0      # compile seconds not yet charged
         self.clock = 0.0
 
-    def _get(self, bs: int, mtl: int):
-        key = (bs, mtl)
-        if key not in self._compiled:
-            batch = self.make_batch(bs * mtl)
-            out = self.fn(self.params, batch)   # trigger compile
-            jax.block_until_ready(out)
-            self._compiled[key] = batch
-        return self._compiled[key]
+    # -- capacity -----------------------------------------------------------
+    def bucket(self, n: int) -> int:
+        """Smallest bucket >= n (or n itself beyond the largest bucket)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return n
 
-    def mean_latency(self, bs: int, mtl: int, iters: int = 3) -> float:
-        batch = self._get(bs, mtl)
+    @property
+    def param_bytes(self) -> float:
+        if self._param_bytes is None:    # fits() runs per scaler candidate
+            leaves = jax.tree_util.tree_leaves(self.params)
+            self._param_bytes = float(sum(x.size * x.dtype.itemsize
+                                          for x in leaves))
+        return self._param_bytes
+
+    def _batch_bytes_per_item(self) -> float:
+        if self.act_bytes_per_item is not None:
+            return self.act_bytes_per_item
+        leaves = jax.tree_util.tree_leaves(self.make_batch(1))
+        raw = sum(np.asarray(x).size * np.asarray(x).dtype.itemsize
+                  for x in leaves)
+        self.act_bytes_per_item = raw * ACT_MULT
+        return self.act_bytes_per_item
+
+    def fits(self, bs: int, mtl: int) -> bool:
+        """Memory-aware admission when a `mem_bytes` budget is configured
+        (param bytes + per-item activation estimate at the BUCKETED batch,
+        since that is the shape actually compiled); the historical hard
+        cap `bs * mtl <= 4096` when no budget is given."""
+        n = bs * mtl
+        if self.mem_bytes is None:
+            return n <= 4096
+        need = (self.param_bytes * PARAM_OVERHEAD
+                + self.bucket(n) * self._batch_bytes_per_item())
+        return need <= self.mem_bytes
+
+    # -- executable cache ---------------------------------------------------
+    def _get(self, n_bucket: int):
+        entry = self._exec.get(n_bucket)
+        if entry is not None:
+            self.cache_stats.hits += 1
+            return entry
+        self.cache_stats.misses += 1
         t0 = time.perf_counter()
-        for _ in range(iters):
-            out = self.fn(self.params, batch)
+        batch = self.make_batch(n_bucket)
+        if self.donate_batch:
+            # host template FIRST: a donating warmup call below would delete
+            # the device buffers before they could be read back
+            batch = jax.tree_util.tree_map(np.asarray, batch)
+        if self.aot:
+            executable = self._jfn.lower(self.params, batch).compile()
+        else:
+            executable = self._jfn
+            jax.block_until_ready(
+                executable(self.params, self._staged_batch(batch)))
+        dt = time.perf_counter() - t0
+        self.cache_stats.compile_time_s += dt
+        self._pending_compile += dt
+        entry = (executable, batch)
+        self._exec[n_bucket] = entry
+        return entry
+
+    def _staged_batch(self, batch):
+        return jax.device_put(batch) if self.donate_batch else batch
+
+    # -- pricing ------------------------------------------------------------
+    def mean_latency(self, bs: int, mtl: int, iters: int = 3) -> float:
+        executable, batch = self._get(self.bucket(bs * mtl))
+        staged = [self._staged_batch(batch) for _ in range(iters)]
+        t0 = time.perf_counter()
+        for b in staged:
+            out = executable(self.params, b)
         jax.block_until_ready(out)
         return (time.perf_counter() - t0) / iters
 
-    def fits(self, bs: int, mtl: int) -> bool:
-        return bs * mtl <= 4096
-
+    # -- execution ----------------------------------------------------------
     def run_step(self, bs: int, mtl: int) -> dict:
-        batch = self._get(bs, mtl)
+        nb = self.bucket(bs * mtl)
+        executable, batch = self._get(nb)
+        comp = self._pending_compile
+        self._pending_compile = 0.0
+        staged = self._staged_batch(batch)
         t0 = time.perf_counter()
-        out = self.fn(self.params, batch)
+        out = executable(self.params, staged)
         jax.block_until_ready(out)
         lat = time.perf_counter() - t0
-        self.clock += lat
-        items = bs * mtl
+        self.clock += lat + comp
+        items = bs * mtl                 # bucket padding rows do not count
         return {
             "step_time": lat,
             "items": items,
+            "compile_time": comp,
+            "bucket_items": nb,
             "request_latencies": np.full(min(items, 64), lat),
             "power_w": self.peak_w * 0.6,
             "throughput": items / lat,

@@ -1,39 +1,100 @@
-"""Serving metrics: sliding-window tail latency, throughput, power/energy."""
+"""Serving metrics: sliding-window tail latency, throughput, power/energy,
+and the real-executor AOT compile-cache counters."""
 
 from __future__ import annotations
 
-from collections import deque
+import dataclasses
 
 import numpy as np
 
 
 class TailLatencyWindow:
-    """p95 (the paper's SLO metric) over the most recent N request latencies."""
+    """p95 (the paper's SLO metric) over the most recent N request latencies.
+
+    Ring buffer + memoized quantile: the cluster engines read ``p95`` twice
+    per step (trace + controller observation), which made ``np.quantile``
+    over a deque the single hottest line of the 30-job cluster bench.  The
+    quantile is recomputed only after the buffer changes, via a partial
+    sort, reproducing ``np.quantile``'s linear interpolation exactly."""
 
     def __init__(self, window: int = 200, quantile: float = 0.95):
         self.window = window
         self.quantile = quantile
-        self.buf: deque = deque(maxlen=window)
+        self._buf = np.empty(window, np.float64)
+        self._n = 0            # valid samples (<= window)
+        self._i = 0            # next write slot
+        self._p95: float | None = None
+
+    def __len__(self) -> int:
+        return self._n
 
     def add(self, latency_s: float, count: int = 1) -> None:
-        for _ in range(count):
-            self.buf.append(latency_s)
+        self.add_many([latency_s] * count)
 
     def add_many(self, latencies) -> None:
-        self.buf.extend(latencies)
+        lat = np.asarray(latencies, np.float64).ravel()
+        if lat.size >= self.window:          # only the newest `window` survive
+            self._buf[:] = lat[-self.window:]
+            self._n, self._i = self.window, 0
+        elif lat.size:
+            end = min(self._i + lat.size, self.window)
+            head = end - self._i
+            self._buf[self._i:end] = lat[:head]
+            if head < lat.size:              # wrap around
+                self._buf[:lat.size - head] = lat[head:]
+            self._i = (self._i + lat.size) % self.window
+            self._n = min(self._n + lat.size, self.window)
+        self._p95 = None
 
     @property
     def p95(self) -> float:
-        if not self.buf:
+        if self._n == 0:
             return 0.0
-        return float(np.quantile(np.asarray(self.buf), self.quantile))
+        if self._p95 is None:
+            a = self._buf[:self._n]
+            pos = self.quantile * (self._n - 1)
+            lo = int(pos)
+            if lo + 1 >= self._n:
+                self._p95 = float(a.max())
+            else:
+                part = np.partition(a, (lo, lo + 1))
+                self._p95 = float(part[lo] + (pos - lo) * (part[lo + 1]
+                                                           - part[lo]))
+        return self._p95
 
     @property
     def mean(self) -> float:
-        return float(np.mean(self.buf)) if self.buf else 0.0
+        return float(self._buf[:self._n].mean()) if self._n else 0.0
 
     def reset(self) -> None:
-        self.buf.clear()
+        self._n, self._i, self._p95 = 0, 0, None
+
+
+@dataclasses.dataclass
+class ExecCacheStats:
+    """Hit/miss counters for RealExecutor's AOT executable cache.
+
+    ``reset_counters`` is the warmup boundary: steady-state serving must
+    show ``misses == 0`` afterwards (every scaler probe reuses a compiled
+    executable)."""
+
+    hits: int = 0
+    misses: int = 0
+    compile_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 1.0
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = 0
+        self.compile_time_s = 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate,
+                "compile_time_s": self.compile_time_s}
 
 
 class RunAccumulator:
@@ -47,6 +108,7 @@ class RunAccumulator:
         self.trace: list = []          # (t, bs_or_mtl, p95, throughput)
         self.violations = 0
         self.requests = 0
+        self.compile_stall_s = 0.0     # XLA compile time charged to the run
 
     def record_step(self, *, items: int, step_time: float, power_w: float,
                     request_latencies, slo: float) -> None:
@@ -100,4 +162,5 @@ class RunAccumulator:
             "slo_attainment": self.slo_attainment,
             "items": self.total_items,
             "sim_time_s": self.total_time,
+            "compile_stall_s": self.compile_stall_s,
         }

@@ -27,6 +27,7 @@ FLASH_CASES = [
     (1, 256, 256, 8, 1, 128, True, 100, 30.0),     # MQA + window + cap
     (1, 96, 96, 8, 8, 32, False, None, None),      # bidirectional (encoder)
     (3, 384, 384, 15, 5, 64, True, None, None),    # smollm-like heads
+    (2, 200, 200, 6, 2, 64, False, None, None),    # non-causal k-padding
 ]
 
 
@@ -112,6 +113,23 @@ def test_ssd_scan_respects_initial_state():
                                atol=2e-3, rtol=2e-3)
     np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
                                atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 64), (128, 64)])
+def test_flash_attention_noncausal_kpad_explicit_blocks(blocks):
+    """Non-divisible Tk with causal=False: pad keys must be masked, not
+    rejected (the wrapper used to raise ValueError on this path)."""
+    bq, bk = blocks
+    B, Tq, Tk, H, KV, hd = 1, 100, 100, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, Tq, H, hd))
+    k = jax.random.normal(ks[1], (B, Tk, KV, hd))
+    v = jax.random.normal(ks[2], (B, Tk, KV, hd))
+    assert Tk % bk != 0                     # really exercises the pad path
+    out = flash_attention(q, k, v, causal=False, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_flash_attention_gradients_match_ref():
