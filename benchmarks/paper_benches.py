@@ -239,6 +239,41 @@ def bench_llm_serving():
     return rows
 
 
+def bench_churn():
+    """Beyond-paper: online job churn — admissions/drains mid-run under
+    {static-union, dynamic re-placement, dynamic + shared surface}
+    placement policies on one shared trace.  Goodput (SLO-attainment-
+    weighted completions per second) is the headline; request
+    conservation is checked on every row."""
+    from repro.serving.cluster import CHURN_POLICIES, run_churn_cluster
+    from repro.serving.workload import churn_trace
+
+    rows = []
+    horizon, seed = 120.0, 1
+    trace = churn_trace(horizon_s=horizon, n_initial=4, n_churn=10,
+                        mean_lifetime_s=30.0, seed=seed)
+    goodput = {}
+    for policy in CHURN_POLICIES:
+        rep = run_churn_cluster(policy, trace=list(trace), n_devices=5,
+                                horizon_s=horizon, seed=seed)
+        a = rep["aggregate"]
+        conserved = a["conserved"] and all(
+            r["submitted"] == r["completed"] + r["rejected"] + r["backlog"]
+            for r in rep["per_job"])
+        goodput[policy] = a["goodput"]
+        rows.append((f"churn/{policy}", 0.0,
+                     f"goodput={a['goodput']:.1f}/s,"
+                     f"thr={a['aggregate_throughput']:.1f}/s,"
+                     f"migs={a['migrations']},"
+                     f"mig_stall={a['migration_stall_s']:.1f}s,"
+                     f"conserved={'yes' if conserved else 'NO'}"))
+    rows.append(("churn/dynamic_vs_union", 0.0,
+                 f"x{goodput['dynamic'] / max(goodput['union'], 1e-9):.2f}"))
+    rows.append(("churn/surface_vs_union", 0.0,
+                 f"x{goodput['surface'] / max(goodput['union'], 1e-9):.2f}"))
+    return rows
+
+
 def bench_burst():
     """Beyond-paper: open-loop bursty arrivals (paper §3.2 mentions bursty
     workloads) — DNNScaler vs static bs=1 under a 3x burst."""

@@ -1,11 +1,18 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--only X]
-[--json DIR]``.
+[--json DIR] [--check DIR]``.
 
 ``--json DIR`` additionally writes one ``BENCH_<suite>.json`` per suite
 (rows + wall time + autotune-cache stats) — the persisted perf trajectory:
 each PR's recorded baselines live next to the previous ones, so a
 regression shows up as a diff, not a memory.
+
+``--check DIR`` re-runs every suite that has a committed
+``BENCH_<suite>.json`` in DIR and compares the fresh throughput/goodput
+metrics row by row against the baseline, exiting nonzero on any >10%
+regression (``--check-tol`` to change).  Wall-clock rows (us_per_call)
+are NOT gated — they are too noisy across machines; the gated metrics
+come from the simulated-time engines and are deterministic per seed.
 
 Suites (one per paper table/figure — DESIGN.md §8):
   fig1          BS / MTL sweeps (preliminary study)
@@ -18,6 +25,7 @@ Suites (one per paper table/figure — DESIGN.md §8):
   fig12         B+MT combination
   llm           DNNScaler on the assigned architectures (TPU model)
   cluster       multi-job cluster serving: paper vs hybrid vs pure knobs
+  churn         online admit/drain churn: union vs dynamic vs shared surface
   burst         open-loop bursty arrivals: DNNScaler vs static (beyond paper)
   alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
   matcomp       ablation: matrix completion vs naive interpolation
@@ -29,8 +37,10 @@ Suites (one per paper table/figure — DESIGN.md §8):
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
+import re
 import sys
 import time
 
@@ -48,6 +58,7 @@ def suites():
         "fig12": paper_benches.bench_fig12_combination,
         "llm": paper_benches.bench_llm_serving,
         "cluster": paper_benches.bench_cluster,
+        "churn": paper_benches.bench_churn,
         "burst": paper_benches.bench_burst,
         "alpha": paper_benches.bench_alpha_ablation,
         "matcomp": paper_benches.bench_matrix_completion_ablation,
@@ -80,6 +91,76 @@ def _autotune_delta(before: dict, after: dict) -> dict:
     return out
 
 
+# metrics gated by --check: simulated-time results, deterministic per seed
+# (wall-clock us_per_call rows are informational only — too noisy to gate)
+_CHECKED_METRICS = ("thr", "goodput")
+
+
+def _parse_metrics(derived) -> dict:
+    """``k=<float><unit>`` pairs out of a derived string."""
+    out = {}
+    for part in str(derived).split(","):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        m = re.match(r"[-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?", v.strip())
+        if m:
+            out[k.strip()] = float(m.group(0))
+    return out
+
+
+def check_against(base_dir: str, *, tol: float = 0.10,
+                  only=None) -> int:
+    """Re-run every suite with a committed BENCH_<suite>.json in
+    `base_dir` and compare fresh throughput/goodput metrics row by row.
+    Returns the number of regressions (fresh < (1 - tol) * baseline)."""
+    table = suites()
+    regressions = 0
+    checked = 0
+    for path in sorted(glob.glob(os.path.join(base_dir, "BENCH_*.json"))):
+        committed = json.load(open(path))
+        suite = committed.get("suite")
+        if suite not in table or (only and suite not in only):
+            continue
+        if not any(m in _parse_metrics(r.get("derived", ""))
+                   for r in committed.get("rows", [])
+                   for m in _CHECKED_METRICS):
+            continue    # nothing gated in this baseline (wall-clock-only
+            #             suites like kernels): don't burn time re-running
+        try:
+            fresh_rows = table[suite]()
+        except Exception as e:  # noqa: BLE001
+            print(f"CHECK {suite}: ERROR {type(e).__name__}: {e}")
+            regressions += 1
+            continue
+        fresh = {name: _parse_metrics(derived)
+                 for name, _, derived in fresh_rows}
+        for row in committed.get("rows", []):
+            base = _parse_metrics(row.get("derived", ""))
+            got = fresh.get(row["name"])
+            if got is None:
+                print(f"CHECK {suite}: MISSING row {row['name']}")
+                regressions += 1
+                continue
+            for metric in _CHECKED_METRICS:
+                if metric not in base:
+                    continue
+                checked += 1
+                if metric not in got:
+                    print(f"CHECK {suite}: {row['name']} lost "
+                          f"metric {metric}")
+                    regressions += 1
+                elif got[metric] < (1.0 - tol) * base[metric]:
+                    print(f"CHECK {suite}: REGRESSION {row['name']} "
+                          f"{metric} {base[metric]:.1f} -> "
+                          f"{got[metric]:.1f} "
+                          f"({got[metric] / base[metric] - 1.0:+.1%})")
+                    regressions += 1
+    print(f"CHECK: {checked} metrics compared, {regressions} regressions "
+          f"(tolerance {tol:.0%})")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -88,7 +169,19 @@ def main() -> None:
                     metavar="DIR",
                     help="also write BENCH_<suite>.json files into DIR "
                          "(default: current directory)")
+    ap.add_argument("--check", default=None, metavar="DIR",
+                    help="compare a fresh run against the committed "
+                         "BENCH_*.json baselines in DIR; exit nonzero on "
+                         "any >tol regression")
+    ap.add_argument("--check-tol", type=float, default=0.10,
+                    help="relative regression tolerance for --check "
+                         "(default 0.10)")
     args = ap.parse_args()
+    if args.check:
+        only = set(args.only.split(",")) if args.only else None
+        if check_against(args.check, tol=args.check_tol, only=only):
+            raise SystemExit(1)
+        return
     table = suites()
     names = args.only.split(",") if args.only else list(table)
     if args.json:

@@ -36,15 +36,31 @@ class DNNScalerController:
                  estimator: Optional[LatencyEstimator] = None,
                  max_bs: int = 128, max_mtl: int = 10,
                  m: int = 32, n: int = 8, decision_interval: int = 5,
-                 mode: str = "auto"):
+                 mode: str = "auto", surface_library=None,
+                 surface_key=None):
         if mode not in ("auto", "hybrid", "B", "MT"):
             raise ValueError(f"unknown mode {mode!r}")
         self.slo = slo_s
         self.mode = mode
+        self.max_bs = max_bs
         self.max_mtl = max_mtl
         self.estimator = estimator or LatencyEstimator(max_mtl=max_mtl)
+        # cross-job shared surface (core.matrix_completion.SurfaceLibrary):
+        # every probed (bs, mtl) point this controller serves is pooled
+        # into the jobs x knobs matrix, and a new job seeds its scaler
+        # from the soft-impute completion of similar jobs' rows
+        self.surface_library = surface_library
+        self.surface_key = surface_key
         self.profiler = Profiler(executor, m=m, n=n)
         self.profile: ProfileResult = self.profiler.probe()
+        if surface_library is not None:
+            # the profiler's three points — (1,1), (m,1), (1,n) — are free
+            # observations for the shared surface (paper: profiling points
+            # come for free for matrix completion)
+            p = self.profile
+            for (bs, mtl), lat in (((1, 1), p.lat_base), ((m, 1), p.lat_bs_m),
+                                   ((1, n), p.lat_mtl_n)):
+                surface_library.observe(surface_key, bs, mtl, lat)
 
         picked = self.profile.approach if mode == "auto" else mode
         if picked == "hybrid":
@@ -55,16 +71,7 @@ class DNNScalerController:
                                        primary=self.profile.approach,
                                        max_bs=max_bs, max_mtl=max_mtl,
                                        decision_interval=decision_interval)
-            self._surface = None
-            if hasattr(executor, "price_surface"):
-                # 2-D analogue of the matrix-completion seed: price the
-                # whole knob grid in ONE vectorized call and pin the
-                # model-infeasible frontier before the first probe
-                bs_vals = np.arange(1, max_bs + 1)
-                mtl_vals = np.arange(1, max_mtl + 1)
-                lat = executor.price_surface(bs_vals, mtl_vals)
-                self._surface = (bs_vals, mtl_vals, lat)
-                self.scaler.seed_surface(bs_vals, mtl_vals, lat)
+            self._seed_scaler_surface(executor)
         elif picked == "B":
             self.scaler = BatchScaler(slo_s, max_bs=max_bs,
                                       decision_interval=decision_interval)
@@ -73,6 +80,64 @@ class DNNScalerController:
             self.scaler = MTScaler(slo_s, self.estimator, observed,
                                    max_mtl=max_mtl,
                                    decision_interval=decision_interval)
+
+    def _seed_scaler_surface(self, executor) -> None:
+        """Pin the HybridScaler's infeasible frontier before the first
+        probe.  Preference order: the cross-job SurfaceLibrary completion
+        (history of architecturally similar jobs, de-normalized by this
+        job's own base point) when it has enough data; otherwise the
+        executor's analytic `price_surface` floor."""
+        self._surface = None
+        self._surface_margin = 1.0
+        lib = self.surface_library
+        if lib is not None:
+            pred = lib.predict(self.surface_key)
+            if pred is not None:
+                est, support = pred
+                bs_vals = np.asarray(lib.bs_values)
+                mtl_vals = np.asarray(lib.mtl_values)
+                keep = bs_vals <= self.max_bs
+                mtl_keep = mtl_vals[mtl_vals <= self.max_mtl]
+                sub = est[keep][:, :len(mtl_keep)]
+                sup = support[keep][:, :len(mtl_keep)]
+                # a completed row is an ESTIMATE: pin only SUPPORTED points
+                # (some pooled observation dominates them) predicted well
+                # over the SLO, so estimation error cannot wall off a
+                # feasible region permanently
+                self._surface = (bs_vals[keep], mtl_keep,
+                                 np.where(sup, sub, 0.0))
+                self._surface_margin = 1.3
+                self.scaler.seed_surface(*self._surface,
+                                         margin=self._surface_margin)
+                # the 2-D analogue of MTScaler's matrix-completion jump:
+                # START at the predicted steady point instead of climbing
+                # from (1, 1) — a freshly admitted job otherwise serves a
+                # fraction of its demand for the whole climb while its
+                # queue (and every queued request's latency) explodes.
+                # The jump targets a conservative 0.75*SLO (mean-to-p95
+                # slack plus estimation error) and only SUPPORTED points —
+                # an unsupported corner is extrapolation, not history.
+                # The MTL jump's launch stall is charged by the engine
+                # like any other reconfiguration, and a wrong jump is
+                # undone by the scaler's gross-violation shrink within a
+                # few decisions.
+                from repro.serving.device_model import best_feasible_point
+                sc = self.scaler
+                best = best_feasible_point(
+                    np.where(sup, sub, np.inf), bs_vals[keep], mtl_keep,
+                    min(sc.alpha, 0.75) * self.slo)
+                if best is not None:
+                    _, sc.bs, sc.mtl = best
+                return
+        if hasattr(executor, "price_surface"):
+            # 2-D analogue of the matrix-completion seed: price the
+            # whole knob grid in ONE vectorized call and pin the
+            # model-infeasible frontier before the first probe
+            bs_vals = np.arange(1, self.max_bs + 1)
+            mtl_vals = np.arange(1, self.max_mtl + 1)
+            lat = executor.price_surface(bs_vals, mtl_vals)
+            self._surface = (bs_vals, mtl_vals, lat)
+            self.scaler.seed_surface(bs_vals, mtl_vals, lat)
 
     @property
     def approach(self) -> str:
@@ -87,12 +152,38 @@ class DNNScalerController:
         if changed and getattr(self, "_surface", None) is not None:
             # set_slo cleared all pins; re-derive the infeasible frontier
             # for the new SLO from the already-priced surface (no re-pricing)
-            self.scaler.seed_surface(*self._surface)
+            self.scaler.seed_surface(*self._surface,
+                                     margin=getattr(self, "_surface_margin",
+                                                    1.0))
+
+    def note_capacity_change(self, executor=None) -> None:
+        """The job's device share changed (cluster migration): every pin
+        and search bound was learned on a surface that no longer exists.
+        Reset the scaler's search state — and this job's shared-surface
+        row, whose old-share points would poison the completion — then
+        re-seed the frontier from the new executor's pricing (or the
+        shared surface library)."""
+        sc = self.scaler
+        if hasattr(sc, "reset_search"):
+            sc.reset_search()
+        if executor is not None:
+            self.profiler.executor = executor
+        if self.surface_library is not None:
+            self.surface_library.reset_row(self.surface_key)
+        if isinstance(sc, HybridScaler):
+            self._seed_scaler_surface(executor if executor is not None
+                                      else self.profiler.executor)
 
     def action(self) -> Action:
         return self.scaler.action()
 
     def observe(self, p95: float, result: Optional[dict] = None) -> None:
+        if self.surface_library is not None and result is not None:
+            st = result.get("step_time")
+            if st:
+                act = self.scaler.action()   # the point this step served
+                self.surface_library.observe(self.surface_key,
+                                             act.bs, act.mtl, st)
         self.scaler.observe(p95, result)
 
 

@@ -47,6 +47,194 @@ def soft_impute(M: np.ndarray, mask: np.ndarray, *, lam: float = 0.05,
     return X
 
 
+class SurfaceLibrary:
+    """Cross-job shared (bs, mtl) latency surface (2-D analogue of §3.3.2).
+
+    Every job's probed (bs, mtl) step-latency points land in one jobs x
+    knobs matrix (rows = serving tenancies, columns = the flattened
+    (bs, mtl) grid).  Rows are normalized by the job's (bs=1, mtl=1)
+    latency — the paper's §3.3.2 scheme — so the low-rank structure
+    captures scaling-curve *shapes* across architecturally similar jobs
+    rather than absolute speeds (which also makes rows comparable across
+    device shares).  `soft_impute` completes the matrix; `predict` returns
+    a newly admitted job's full de-normalized surface so its HybridScaler
+    can seed dominance pins from history instead of the analytic floor,
+    and so re-placement can anticipate its hybrid steady state."""
+
+    def __init__(self, bs_values: tuple = (1, 2, 4, 8, 16, 32, 64, 128),
+                 max_mtl: int = 10, *, min_rows: int = 1,
+                 min_points: int = 2, rank: int = 3, loo_tol: float = 0.3,
+                 sim_tol: float = 0.25, max_sim_rows: int = 6):
+        self.bs_values = tuple(int(b) for b in bs_values)
+        self.mtl_values = tuple(range(1, max_mtl + 1))
+        self.min_rows = min_rows          # similar rows needed to predict
+        self.min_points = min_points      # observed points the target needs
+        self.rank = rank
+        self.loo_tol = loo_tol            # leave-one-out relative error gate
+        self.sim_tol = sim_tol            # shared-support similarity gate
+        self.max_sim_rows = max_sim_rows  # completion uses the k best rows
+        self._bs_idx = {b: i for i, b in enumerate(self.bs_values)}
+        self._sum: dict = {}              # key -> (nb, nm) latency sums
+        self._cnt: dict = {}              # key -> (nb, nm) sample counts
+        self._version: dict = {}          # key -> bumped on every change
+        self._pred_cache: dict = {}       # key -> (versions-fingerprint, est)
+        self.observations = 0             # on-grid points recorded (total)
+
+    @property
+    def shape(self) -> tuple:
+        return len(self.bs_values), len(self.mtl_values)
+
+    def observe(self, key, bs: int, mtl: int, latency_s: float) -> None:
+        """Record one probed step latency.  Off-grid (bs, mtl) points are
+        dropped — the scalers' doubling/AIMD moves keep probes on the
+        power-of-two x small-integer grid, so coverage stays dense."""
+        i = self._bs_idx.get(int(bs))
+        j = int(mtl) - 1
+        if i is None or not 0 <= j < len(self.mtl_values):
+            return
+        if not np.isfinite(latency_s) or latency_s <= 0.0:
+            return
+        if key not in self._sum:
+            self._sum[key] = np.zeros(self.shape)
+            self._cnt[key] = np.zeros(self.shape, dtype=np.int64)
+        self._sum[key][i, j] += float(latency_s)
+        self._cnt[key][i, j] += 1
+        self._version[key] = self._version.get(key, 0) + 1
+        self.observations += 1
+
+    def n_points(self, key) -> int:
+        cnt = self._cnt.get(key)
+        return int((cnt > 0).sum()) if cnt is not None else 0
+
+    def reset_row(self, key) -> None:
+        """Drop a tenancy's accumulated points.  Called when its device
+        share changes: latencies probed on the old share would otherwise
+        be averaged with the new share's and poison the row."""
+        self._sum.pop(key, None)
+        self._cnt.pop(key, None)
+        self._version[key] = self._version.get(key, 0) + 1
+
+    def row(self, key) -> tuple:
+        """(mean-latency grid, observed mask) for one tenancy."""
+        cnt = self._cnt[key]
+        mask = cnt > 0
+        mean = np.where(mask, self._sum[key] / np.maximum(cnt, 1), 0.0)
+        return mean, mask
+
+    def predict(self, key) -> Optional[tuple]:
+        """(completed mean-latency surface, support mask) for `key`, the
+        surface de-normalized by the job's own observed (1, 1) point.
+        None until the target has its (1, 1) normalizer plus `min_points`
+        observations and the library holds `min_rows` similar tenancies
+        (too little history would let one noisy row poison permanent
+        dominance pins downstream).
+
+        The §3.3.2 premise is SIMILARITY, so the completion does not pool
+        every tenancy: library rows are first ranked by agreement with the
+        target on the shared support of their observed (normalized) points
+        and only rows within `sim_tol` median relative error join the
+        matrix — a recurring architecture's earlier tenancy matches almost
+        exactly; an unrelated job's row does not.  The result is then
+        leave-one-out validated: each of the target's observed off-base
+        points is held out in turn and must be recovered within `loo_tol`
+        relative error.  A job with no architecturally similar history
+        gets None instead of a fabricated surface."""
+        if self.n_points(key) < max(self.min_points, 1):
+            return None
+        mean, mask = self.row(key)
+        if not mask[0, 0]:
+            return None                   # need the normalizer
+        t_norm = np.ravel(mean / mean[0, 0])
+        t_mask = np.ravel(mask)
+        others = []
+        for k in self._sum:
+            if k == key or self._cnt[k][0, 0] == 0 or self.n_points(k) < 2:
+                continue
+            m, obs = self.row(k)
+            r_norm = np.ravel(m / m[0, 0])
+            r_mask = np.ravel(obs)
+            shared = np.nonzero(t_mask & r_mask)[0]
+            shared = shared[shared != 0]  # (1,1) is 1.0 by construction
+            if len(shared) < 2:
+                continue                  # not enough overlap to judge
+            err = float(np.median(np.abs(r_norm[shared] - t_norm[shared])
+                                  / np.maximum(np.abs(t_norm[shared]),
+                                               1e-12)))
+            if err <= self.sim_tol:
+                others.append((err, k, r_norm, r_mask))
+        if len(others) < self.min_rows:
+            return None
+        others.sort(key=lambda e: e[0])
+        others = others[:self.max_sim_rows]
+        fingerprint = (tuple(k for _, k, _, _ in others),
+                       self._version.get(key, 0),
+                       sum(self._version.get(k, 0) for _, k, _, _ in others))
+        cached = self._pred_cache.get(key)
+        if cached is not None and cached[0] == fingerprint:
+            return cached[1]
+        # complete in LOG space: latency surfaces are near-multiplicative
+        # families (host x batch x tenancy factors), so their logs are
+        # genuinely low-rank — and the 3-orders-of-magnitude dynamic range
+        # of the linear surface would otherwise let the singular-value
+        # shrinkage crush the few small observed anchors of a sparse row.
+        # The LIBRARY matrix (dense-ish rows) is completed by soft_impute;
+        # the target row is then FOLDED IN by ridge-regressing its few
+        # observed anchors onto the library's principal components —
+        # running the sparse target row through the iterative thresholding
+        # itself would let the shrinkage compound on its ~95% free entries
+        # and collapse them toward zero.
+        lib_rows = np.vstack([np.log(np.maximum(r, 1e-12))
+                              for _, _, r, _ in others])
+        lib_mask = np.vstack([m for _, _, _, m in others])
+        if not lib_mask.all():
+            lib_rows = soft_impute(lib_rows, lib_mask,
+                                   rank=min(self.rank, lib_rows.shape[0]))
+        r_basis = min(self.rank, lib_rows.shape[0])
+        _, _, Vt = np.linalg.svd(lib_rows, full_matrices=False)
+        basis = Vt[:r_basis]                  # (r, knobs), uncentered
+        t_log = np.log(np.maximum(t_norm, 1e-12))
+
+        def complete(target_mask) -> np.ndarray:
+            obs = np.nonzero(target_mask)[0]
+            A = basis[:, obs].T               # (n_obs, r)
+            b = t_log[obs]
+            ridge = 1e-6 * np.eye(r_basis)
+            coef = np.linalg.solve(A.T @ A + ridge, A.T @ b)
+            return np.exp(coef @ basis)
+
+        # leave-one-out gate on the target's off-base observations
+        holdouts = [ix for ix in np.nonzero(t_mask)[0] if ix != 0]
+        for ix in holdouts:
+            loo = t_mask.copy()
+            loo[ix] = False
+            pred = complete(loo)[ix]
+            actual = t_norm[ix]
+            if abs(pred - actual) > self.loo_tol * abs(actual):
+                self._pred_cache[key] = (fingerprint, None)
+                return None
+
+        est = complete(t_mask).reshape(self.shape)
+        est = np.maximum(est, 1e-9)
+        # physical prior: latency is monotone in both knobs
+        est = np.maximum.accumulate(est, axis=0)
+        est = np.maximum.accumulate(est, axis=1)
+        est = est * mean[0, 0]
+        # support: a grid point is trustworthy only if SOME pooled
+        # observation dominates it (component-wise >=) — latency
+        # monotonicity then upper-bounds it by a measured value.  Corners
+        # beyond every observation are pure extrapolation; callers must
+        # not jump to, pin, or promise capacity at unsupported points.
+        pooled = t_mask.reshape(self.shape).copy()
+        for m in lib_mask:
+            pooled |= m.reshape(self.shape)
+        support = np.flip(np.flip(
+            np.maximum.accumulate(np.maximum.accumulate(
+                np.flip(np.flip(pooled, 0), 1), axis=0), axis=1), 0), 1)
+        result = (est, support)
+        self._pred_cache[key] = (fingerprint, result)
+        return result
+
+
 class LatencyEstimator:
     """Estimates latency(MTL) for a new job from two profiled points plus a
     library of fully-profiled historical jobs."""

@@ -45,9 +45,14 @@ class BatchScaler:
     def set_slo(self, slo_s: float) -> None:
         if slo_s != self.slo:
             self.slo = slo_s
-            # re-open the search bounds on SLO change (paper §4.5)
-            self.min_bs, self.max_bs = 1, self.hard_max
-            self._known_bad = None
+            self.reset_search()
+
+    def reset_search(self) -> None:
+        """Re-open the search bounds (SLO change — paper §4.5 — or a
+        device-share change under cluster migration)."""
+        self.min_bs, self.max_bs = 1, self.hard_max
+        self._known_bad = None
+        self.infeasible = False
 
     def action(self) -> Action:
         return Action(bs=self.bs, mtl=1)
@@ -119,8 +124,11 @@ class MTScaler:
 
     def set_slo(self, slo_s: float) -> None:
         if slo_s != self.slo:
-            self._known_bad = None
+            self.reset_search()
         self.slo = slo_s
+
+    def reset_search(self) -> None:
+        self._known_bad = None
 
     def action(self) -> Action:
         return Action(bs=1, mtl=self.mtl)
@@ -262,18 +270,29 @@ class HybridScaler:
     def set_slo(self, slo_s: float) -> None:
         if slo_s != self.slo:
             # re-open the whole 2-D search on SLO change (paper §4.5)
-            self._known_bad.clear()
-            self._dom_counts.clear()
-            self._hi = self.hard_max_bs
-            self._pending = None
-            self.infeasible = False
+            self.reset_search()
         self.slo = slo_s
+
+    def reset_search(self) -> None:
+        """Forget every learned feasibility boundary: pins, the BS ceiling,
+        and any pending probe.  Called on SLO change and when the job's
+        device share changes (cluster migration) — the surface the pins
+        were learned on no longer exists."""
+        self._known_bad.clear()
+        self._dom_counts.clear()
+        self._hi = self.hard_max_bs
+        self._pending = None
+        self.infeasible = False
+        self._viol_streak = 0
+        self._slack_streak = 0
+        self.converged_steps = 0
 
     def action(self) -> Action:
         return Action(bs=self.bs, mtl=self.mtl)
 
     # -- surface seeding ----------------------------------------------------
-    def seed_surface(self, bs_values, mtl_values, latency_s) -> int:
+    def seed_surface(self, bs_values, mtl_values, latency_s,
+                     margin: float = 1.0) -> int:
         """Seed the dominance pins from a priced (bs, mtl) latency surface.
 
         `latency_s[i, j]` is the estimated MEAN latency at
@@ -284,11 +303,16 @@ class HybridScaler:
         pruning in `is_pinned` rules out each frontier point's whole
         upper-right quadrant without a single wasted probe.  Also tightens
         the BS ceiling `_hi` at the current MTL.  Returns the number of
-        frontier pins installed."""
+        frontier pins installed.
+
+        `margin > 1` is for UNCERTAIN surfaces (a cross-job matrix
+        completion rather than the exact analytic price): only points whose
+        estimate exceeds margin*SLO are pinned, so a modest estimation
+        error cannot permanently wall off a genuinely feasible point."""
         lat = np.asarray(latency_s, np.float64)
         bs_values = [int(b) for b in bs_values]
         mtl_values = [int(m) for m in mtl_values]
-        bad = lat > self.slo
+        bad = lat > self.slo * margin
         pins = 0
         prev_first = len(bs_values)      # first-bad row of the previous MTL
         for j, m in enumerate(mtl_values):

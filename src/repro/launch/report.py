@@ -87,6 +87,35 @@ def cluster_tables(reports: dict) -> str:
     return "\n".join(parts)
 
 
+def churn_tables(reports: dict) -> str:
+    """Markdown for a churn run ({policy: ClusterEngine report}, the
+    structure examples/cluster_churn.py dumps)."""
+    parts = ["| policy | goodput | throughput | admissions | drains | "
+             "migrations | migration stalls | conserved |",
+             "|---|---|---|---|---|---|---|---|"]
+    for policy, rep in reports.items():
+        a = rep["aggregate"]
+        parts.append(
+            f"| {policy} | {a['goodput']:.1f}/s | "
+            f"{a['aggregate_throughput']:.1f}/s | {a['admissions']} | "
+            f"{a['drains']} | {a['migrations']} | "
+            f"{a['migration_stall_s']:.1f}s | "
+            f"{'yes' if a['conserved'] else 'NO'} |")
+    best = reports.get("surface") or next(iter(reports.values()))
+    parts.append("\n| job | dnn/dataset | device | lifetime | bs | mtl | "
+                 "migs | submitted | completed | rejected | attain |")
+    parts.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in best["per_job"]:
+        end = (f"{r['drained_at']:.0f}s" if r["drained_at"] is not None
+               else "end")
+        parts.append(
+            f"| {r['job_id']} | {r['dnn']} | {r['device']} | "
+            f"{r['admit_s']:.0f}s-{end} | {r['bs']} | {r['mtl']} | "
+            f"{r['migrations']} | {r['submitted']} | {r['completed']} | "
+            f"{r['rejected']} | {r['slo_attainment']:.3f} |")
+    return "\n".join(parts)
+
+
 def collect_summary(recs: dict, variant: str) -> str:
     n = {"OK": 0, "SKIP": 0, "FAIL": 0}
     for (a, s, m, v), r in recs.items():
@@ -101,6 +130,8 @@ def main() -> None:
     ap.add_argument("--final", default="experiments/dryrun_final")
     ap.add_argument("--cluster", default=None,
                     help="cluster_serve.py --json output to tabulate")
+    ap.add_argument("--churn", default=None,
+                    help="cluster_churn.py --json output to tabulate")
     ap.add_argument("--out", default="experiments/roofline_tables.md")
     args = ap.parse_args()
 
@@ -123,6 +154,10 @@ def main() -> None:
     if args.cluster and os.path.exists(args.cluster):
         parts.append("\n### Cluster serving — 30-job Table-4 trace\n")
         parts.append(cluster_tables(json.load(open(args.cluster))))
+    if args.churn and os.path.exists(args.churn):
+        parts.append("\n### Online churn — admission/draining with "
+                     "migration-aware re-placement\n")
+        parts.append(churn_tables(json.load(open(args.churn))))
 
     text = "\n".join(parts) + "\n"
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -9,6 +9,8 @@ whole 30-job Table-4 trace on a simulated cluster.
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --tiny --real
     PYTHONPATH=src python -m repro.launch.serve --cluster --devices 12 \
         --controller hybrid --seconds 240
+    PYTHONPATH=src python -m repro.launch.serve --churn --devices 5 \
+        --seconds 150 --churn-policy surface
 """
 
 from __future__ import annotations
@@ -81,10 +83,19 @@ def main() -> None:
                     choices=["dnnscaler", "hybrid", "clipper", "static"])
     ap.add_argument("--cluster", action="store_true",
                     help="serve the full 30-job trace on a simulated fleet")
-    ap.add_argument("--devices", type=int, default=12,
-                    help="fleet size for --cluster")
-    ap.add_argument("--seconds", type=float, default=90.0,
-                    help="simulated-time horizon for --cluster")
+    ap.add_argument("--churn", action="store_true",
+                    help="online churn: jobs admit/drain mid-run with "
+                         "migration-aware re-placement")
+    ap.add_argument("--churn-policy", default="surface",
+                    choices=["union", "dynamic", "surface"],
+                    help="placement policy for --churn (see "
+                         "serving.cluster.run_churn_cluster)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="fleet size for --cluster / --churn "
+                         "(default 12 / 5)")
+    ap.add_argument("--seconds", type=float, default=None,
+                    help="simulated-time horizon for --cluster / --churn "
+                         "(default 90 / 150)")
     ap.add_argument("--bs", type=int, default=1)
     ap.add_argument("--mtl", type=int, default=1)
     ap.add_argument("--slo-ms", type=float, default=None)
@@ -101,6 +112,26 @@ def main() -> None:
     from repro.perf import autotune
     autotune.configure(cache_dir=args.autotune_cache_dir,
                        tune_on_miss=args.autotune or None)
+
+    if args.churn:
+        from repro.serving.cluster import run_churn_cluster
+        if args.controller not in ("dnnscaler", "hybrid"):
+            ap.error("--churn supports --controller dnnscaler or hybrid")
+        mode = "hybrid" if args.controller == "hybrid" else "auto"
+        rep = run_churn_cluster(args.churn_policy, mode=mode,
+                                n_devices=args.devices or 5,
+                                horizon_s=args.seconds or 150.0,
+                                seed=args.seed)
+        agg = rep["aggregate"]
+        assert agg["conserved"], "request conservation violated"
+        print(f"churn[{args.churn_policy}/{mode}]: {agg['jobs']} tenancies "
+              f"on {agg['devices']} devices — goodput {agg['goodput']:.1f}"
+              f"/s, throughput {agg['aggregate_throughput']:.1f}/s, "
+              f"{agg['admissions']} admissions / {agg['drains']} drains / "
+              f"{agg['migrations']} migrations "
+              f"({agg['migration_stall_s']:.1f}s stalls), "
+              f"conservation OK")
+        return
 
     if args.cluster:
         from repro.serving.cluster import run_paper_cluster
@@ -119,8 +150,8 @@ def main() -> None:
                          "knobs)")
         mode = {"dnnscaler": "auto", "hybrid": "hybrid",
                 "clipper": "clipper"}[args.controller]
-        rep = run_paper_cluster(mode, n_devices=args.devices,
-                                sim_time_limit=args.seconds,
+        rep = run_paper_cluster(mode, n_devices=args.devices or 12,
+                                sim_time_limit=args.seconds or 90.0,
                                 seed=args.seed)
         agg = rep["aggregate"]
         print(f"cluster[{mode}]: {agg['jobs']} jobs on {agg['devices']} "

@@ -23,9 +23,28 @@ This module adds the missing layer:
     request exactly once: completed, rejected (queue overflow), or left in
     the backlog at the horizon — the conservation invariant the cluster
     tests pin.
-  * `run_paper_cluster` is the first-class scenario: the 30 Table-4 jobs
-    on a simulated fleet under {paper DNNScaler, HybridScaler, Clipper,
-    pure-B, pure-MT} controller policies.
+  * Online churn (`churn=` trace of `workload.ChurnJob`s): jobs admit and
+    drain mid-run.  Admission re-runs the SLO-aware packer incrementally —
+    and, when `anticipate=True`, scores candidate devices by each job's
+    PREDICTED HYBRID STEADY STATE (the throughput-optimal (bs, mtl) under
+    alpha*SLO on the post-admission share, from the shared `SurfaceLibrary`
+    completion when it has history, else the analytic latency grid) rather
+    than the (bs=1, mtl=1) point.  Any job whose device share changes pays
+    an explicit migration cost: its current instances are killed and
+    relaunched at the new share (charged to its own clock AND to global
+    `stall_time`/`migration_stall_s`), plus a checkpoint-transfer term for
+    TPU submesh moves (params must stream to the new submesh over DCN).
+    When no device can host a new job, the packer attempts ONE relocation:
+    moving the cheapest-to-migrate resident elsewhere to open room
+    (migration-aware re-placement).  Draining frees share; the departing
+    job stops receiving arrivals at its departure time but serves down its
+    backlog first, so request conservation holds across every
+    reconfiguration.  `static_union=True` disables all of this (placement
+    fixed over the union of every tenancy that ever appears) — the
+    baseline the churn example compares against.
+  * `run_paper_cluster` serves the 30 Table-4 jobs statically;
+    `run_churn_cluster` is the churn scenario under {static-union, dynamic
+    re-placement, dynamic + shared surface} policies.
 """
 
 from __future__ import annotations
@@ -34,13 +53,17 @@ import dataclasses
 import heapq
 from typing import Callable, List, Optional, Sequence
 
+import numpy as np
+
 from repro.serving import device_model as dm
 from repro.serving import tenancy
 from repro.serving.engine import Action, OpenLoopQueue, reconfig_stall
 from repro.serving.executor import SimExecutor
 from repro.serving.metrics import RunAccumulator, TailLatencyWindow
+from repro.serving.workload import ChurnJob
 
 PLACEMENT_ALPHA = 0.85   # the scalers' hysteresis floor (paper alpha)
+CKPT_TRANSFER_BPS = 8e9  # DCN bandwidth for TPU submesh checkpoint moves
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,15 +136,29 @@ class _JobState:
     """Per-job serving state inside the cluster (one controller each)."""
 
     def __init__(self, job, controller, executor, *, window: int,
-                 arrival_rate: Optional[float], max_queue: int, seed: int):
+                 arrival_rate: Optional[float], max_queue: int, seed: int,
+                 admit_s: float = 0.0, depart_s: Optional[float] = None):
         self.job = job
         self.controller = controller
         self.executor = executor
         self.window = TailLatencyWindow(window=window)
         self.acc = RunAccumulator()
-        self.clock = 0.0
+        self.clock = admit_s
+        self.arrival_mark = admit_s    # arrivals sampled up to here — kept
+        #                                separate from the clock so stalls
+        #                                charged between steps (migrations)
+        #                                never swallow an arrival window
+        self.admit_s = admit_s
+        self.depart_s = depart_s
+        self.active = True
+        self.drained_at: Optional[float] = None
+        self.epoch = 0                 # bumped whenever the clock is moved
+        #                                outside a step (stale-heap guard)
+        self.migrations = 0
+        self.migration_stall_s = 0.0
         self.prev = Action(bs=1, mtl=1)
         self.stall_time = 0.0
+        self.arrival_rate = arrival_rate
         # open-loop mechanics (arrival window, overflow, conservation) are
         # the shared OpenLoopQueue helper — same code path as OpenLoopEngine
         self.oq = (OpenLoopQueue(lambda t, r=arrival_rate: r,
@@ -137,54 +174,528 @@ class _JobState:
 
 class ClusterEngine:
     """Serve many jobs across a fleet, one controller each, in lockstep
-    simulated time (see module docstring)."""
+    simulated time, with optional online churn (see module docstring)."""
 
     def __init__(self, jobs: Sequence, fleet: Sequence[DeviceSpec], *,
                  controller_factory: Callable, window: int = 200,
                  instance_launch_s: float = 2.0, instance_kill_s: float = 0.3,
                  arrival_rates: Optional[dict] = None, max_queue: int = 10_000,
-                 seed: int = 0):
-        self.jobs = list(jobs)
+                 seed: int = 0, churn: Optional[Sequence[ChurnJob]] = None,
+                 static_union: bool = False, anticipate: bool = False,
+                 surface_library=None, ckpt_bps: float = CKPT_TRANSFER_BPS,
+                 executor_factory: Optional[Callable] = None):
         self.fleet = list(fleet)
+        self.controller_factory = controller_factory
+        self.window_size = window
         self.instance_launch_s = instance_launch_s
         self.instance_kill_s = instance_kill_s
-        self.placement = place(self.jobs, self.fleet)
-        counts = [self.placement.count(d) for d in range(len(self.fleet))]
+        self.max_queue = max_queue
+        self.seed = seed
+        self.static_union = static_union
+        self.anticipate = anticipate
+        self.surface_library = surface_library
+        self.ckpt_bps = ckpt_bps
+        self.executor_factory = executor_factory
+        self._arrival_rates = arrival_rates or {}
+
         self.stall_time = 0.0
         self.compile_stall_s = 0.0
+        self.migration_stall_s = 0.0
+        self.admissions = 0
+        self.drains = 0
+        self.migrations = 0
+        self._rebuilds = 0
+        self._horizon = float("inf")
+        self._heap: Optional[list] = None
+        self._steady_cache: dict = {}     # (job_id, d, k) -> analytic grid
         self.event_log: list = []         # (global time, job_id) pop order
+        self.churn_log: list = []         # (time, kind, job_id, device)
 
+        churn = sorted(churn or [], key=lambda e: e.admit_s)
+        entries = ([ChurnJob(job=j) for j in jobs]
+                   + [e for e in churn if e.admit_s <= 0.0])
+        self._pending: List[ChurnJob] = [e for e in churn if e.admit_s > 0.0]
+        if static_union:
+            # the baseline: shares fixed over the union of every tenancy
+            # that EVER appears — late arrivals hold their slice from t=0
+            entries = entries + self._pending
+            self._pending = []
+
+        self.jobs = [e.job for e in entries]
         self.states: List[_JobState] = []
-        arrival_rates = arrival_rates or {}
-        for i, job in enumerate(self.jobs):
-            spec = self.fleet[self.placement[i]]
-            share = _job_share(spec, counts[self.placement[i]])
+        self.placement: List[int] = []
+        self.residents: List[List[int]] = [[] for _ in self.fleet]
+        assign = self._initial_placement(entries)
+        counts = [assign.count(d) for d in range(len(self.fleet))]
+        for e, d in zip(entries, assign):
+            i = self._spawn(e, d, counts[d])
+            self.residents[d].append(i)
+
+    # -- construction helpers -----------------------------------------------
+    def _initial_placement(self, entries: Sequence[ChurnJob]) -> List[int]:
+        if not self.anticipate:
+            return place([e.job for e in entries], self.fleet)
+        # anticipation-aware batch packing: same tightest-SLO-first greedy,
+        # but each pick scores devices by the predicted steady state
+        assign: List[Optional[int]] = [None] * len(entries)
+        residents: List[List[int]] = [[] for _ in self.fleet]
+
+        def rate_of(e: ChurnJob) -> Optional[float]:
+            return (e.arrival_rate if e.arrival_rate is not None
+                    else self._arrival_rates.get(e.job.job_id))
+
+        order = sorted(range(len(entries)),
+                       key=lambda i: entries[i].job.slo_s)
+        for i in order:
+            res_info = [[(entries[j].job, rate_of(entries[j])) for j in r]
+                        for r in residents]
+            d = self._choose_device(entries[i].job, rate_of(entries[i]),
+                                    res_info, at=0.0)
+            assign[i] = d
+            residents[d].append(i)
+        return assign
+
+    def _executor_params(self, spec: DeviceSpec, k: int) -> tuple:
+        """(device, mesh_shape, share) for one of k co-residents."""
+        share = _job_share(spec, k)
+        if spec.mesh_shape is not None:
+            p = _submesh_for(spec.mesh_shape, k)
+            if p is not None:
+                return spec.device.share(p.share), p.replica_shape, p.share
+            # more jobs than chips: no disjoint submesh exists, so the
+            # slice is time-multiplexed — price an equal 1/k share
+            # (pricing the FULL device here would serve every
+            # over-subscribed job as sole owner and overstate the
+            # aggregate k-fold)
+            return spec.device.share(1.0 / k), spec.mesh_shape, 1.0 / k
+        dev = spec.device.share(share) if share < 1.0 else spec.device
+        return dev, None, share
+
+    def _make_executor(self, job, d: int, k: int, seed: int):
+        spec = self.fleet[d]
+        dev, mesh, share = self._executor_params(spec, k)
+        if self.executor_factory is not None:
+            ex = self.executor_factory(job, spec, share, mesh, seed)
+        else:
             prof = job.profile()
-            if spec.mesh_shape is not None:
-                k = counts[self.placement[i]]
-                p = _submesh_for(spec.mesh_shape, k)
-                if p is not None:
-                    mesh, dev = p.replica_shape, spec.device.share(p.share)
-                else:
-                    # more jobs than chips: no disjoint submesh exists, so
-                    # the slice is time-multiplexed — price an equal 1/k
-                    # share (pricing the FULL device here would serve every
-                    # over-subscribed job as sole owner and overstate the
-                    # aggregate k-fold)
-                    mesh, dev = spec.mesh_shape, spec.device.share(1.0 / k)
-                mk = lambda s, dev=dev, mesh=mesh, prof=prof: SimExecutor(
-                    prof, device=dev, mesh_shape=mesh, seed=s)
+            if mesh is not None:
+                ex = SimExecutor(prof, device=dev, mesh_shape=mesh, seed=seed)
             else:
-                dev = spec.device.share(share) if share < 1.0 else spec.device
-                mk = lambda s, dev=dev, prof=prof: SimExecutor(
-                    prof, device=dev, seed=s)
-            serving_ex = mk(seed + i)
-            profiling_ex = mk(seed + 1000 + i)   # probes stay off the books
-            controller = controller_factory(job, profiling_ex)
-            self.states.append(_JobState(
-                job, controller, serving_ex, window=window,
-                arrival_rate=arrival_rates.get(job.job_id),
-                max_queue=max_queue, seed=seed + 2000 + i))
+                ex = SimExecutor(prof, device=dev, seed=seed)
+        try:
+            ex._cluster_share = share    # lets _reshare skip no-op rebuilds
+        except AttributeError:           # exotic executors with __slots__
+            pass
+        return ex
+
+    def _spawn(self, entry: ChurnJob, d: int, k: int) -> int:
+        """Create the per-job state on device d (with k co-residents)."""
+        i = len(self.states)
+        job = entry.job
+        serving_ex = self._make_executor(job, d, k, self.seed + i)
+        profiling_ex = self._make_executor(job, d, k, self.seed + 1000 + i)
+        controller = self.controller_factory(job, profiling_ex)
+        rate = (entry.arrival_rate if entry.arrival_rate is not None
+                else self._arrival_rates.get(job.job_id))
+        st = _JobState(job, controller, serving_ex, window=self.window_size,
+                       arrival_rate=rate, max_queue=self.max_queue,
+                       seed=self.seed + 2000 + i, admit_s=entry.admit_s,
+                       depart_s=entry.depart_s)
+        self.states.append(st)
+        self.placement.append(d)
+        if len(self.jobs) < len(self.states):
+            self.jobs.append(job)
+        return i
+
+    # -- steady-state anticipation ------------------------------------------
+    def _predicted_steady(self, job, d: int, k: int,
+                          *, alpha: float = PLACEMENT_ALPHA
+                          ) -> Optional[tuple]:
+        """(throughput, bs, mtl) at the predicted hybrid steady state of
+        `job` on device d with k residents: the throughput-optimal grid
+        point whose predicted latency fits under alpha*SLO.  Prefers the
+        cross-job SurfaceLibrary completion (re-anchored to this share's
+        analytic base point); falls back to the analytic latency grid.
+        None when even (bs=1, mtl=1) does not fit."""
+        spec = self.fleet[d]
+        dev, mesh, share = self._executor_params(spec, k)
+        prof = job.profile()
+        lib = self.surface_library
+        bs_vals = np.asarray(lib.bs_values if lib is not None
+                             else (1, 2, 4, 8, 16, 32, 64, 128))
+        mtl_vals = np.asarray(lib.mtl_values if lib is not None
+                              else tuple(range(1, 11)))
+        n_mtl = len(mtl_vals)
+        if mesh is not None:
+            cap = tenancy.max_tenancy(mesh)
+            mtl_vals = mtl_vals[mtl_vals <= max(cap, 1)]
+            n_mtl = len(mtl_vals)
+        surface = None
+        if lib is not None:
+            pred = lib.predict(job.job_id)
+            if pred is not None:
+                est, support = pred
+                est, support = est[:, :n_mtl], support[:, :n_mtl]
+                # the completed row is a SHAPE (normalized by the job's
+                # observed base at its old share); re-anchor it to the
+                # candidate share's analytic (1, 1) point.  Unsupported
+                # corners are extrapolation — never promise capacity there
+                base = _base_latency(spec, prof, k)
+                surface = np.where(support, est / est[0, 0] * base,
+                                   np.inf)
+        if surface is None:
+            # the analytic grid depends only on (job, device, k): memoize —
+            # the relocation/rebalance scans re-price the same triple many
+            # times per churn event
+            ck = (job.job_id, d, k)
+            surface = self._steady_cache.get(ck)
+            if surface is None:
+                if mesh is not None:
+                    ex = SimExecutor(prof, device=dev, mesh_shape=mesh)
+                    surface = ex.price_surface(bs_vals, mtl_vals)
+                else:
+                    surface = dm.mt_latency_grid(dev, prof, bs_vals,
+                                                 mtl_vals)
+                self._steady_cache[ck] = surface
+        return dm.best_feasible_point(surface, bs_vals, mtl_vals,
+                                      alpha * job.slo_s)
+
+    def _migration_cost(self, st: _JobState, spec: DeviceSpec) -> float:
+        """Seconds a share change costs `st`: its currently running
+        instances are killed and relaunched at the new share in ONE
+        parallel round (unlike the scaler's one-at-a-time MTL climbs, a
+        share resize restarts every context at once), plus a
+        checkpoint-transfer term for TPU submesh moves — each instance's
+        params stream to the new submesh over shared DCN bandwidth, so
+        that term IS serial in bytes."""
+        mtl = max(st.prev.mtl, 1)
+        cost = self.instance_kill_s + self.instance_launch_s
+        if spec.mesh_shape is not None:
+            cost += st.job.profile().param_bytes * mtl / self.ckpt_bps
+        return cost
+
+    def _disruption_items(self, d: int) -> float:
+        """Requests the residents of d would forgo while paying the
+        migration stall a new admission forces on them."""
+        total = 0.0
+        for j in self.residents[d]:
+            st = self.states[j]
+            total += st.acc.throughput * self._migration_cost(st,
+                                                              self.fleet[d])
+        return total
+
+    def _choose_device(self, job, rate: Optional[float],
+                       res_info: List[List[tuple]],
+                       *, at: float, with_disruption: bool = False) -> int:
+        """Incremental SLO-aware pick for one job over current residents
+        (`res_info[d]` = [(job, arrival_rate or None), ...]).
+
+        Feasibility is the same alpha*SLO check as `place`; among feasible
+        devices, anticipation mode maximizes the cluster-level gain: the
+        new job's predicted steady-state throughput — CAPPED at its
+        arrival rate, a job never serves demand it doesn't have — over
+        the remaining horizon, net of every co-resident's demand-capped
+        steady-state loss from the share shrink and of the one-off
+        migration disruption."""
+        prof = job.profile()
+        feasible, fallback = [], []
+        for d, spec in enumerate(self.fleet):
+            k = len(res_info[d]) + 1
+            ok = (_base_latency(spec, prof, k) <= PLACEMENT_ALPHA * job.slo_s
+                  and all(_base_latency(spec, rj.profile(), k)
+                          <= PLACEMENT_ALPHA * rj.slo_s
+                          for rj, _ in res_info[d]))
+            (feasible if ok else fallback).append(d)
+        pool = feasible or fallback
+
+        def load(d: int) -> float:
+            return sum(rj.profile().occupancy for rj, _ in res_info[d])
+
+        if not self.anticipate:
+            return min(pool, key=lambda d: (load(d), len(res_info[d]), d))
+        remaining = max(self._horizon - at, 0.0) if np.isfinite(
+            self._horizon) else 1.0
+        remaining = max(remaining, 1e-9)
+
+        served = self._served_rate
+
+        def score(d: int) -> tuple:
+            k0, k1 = len(res_info[d]), len(res_info[d]) + 1
+            gain = served(job, rate, d, k1) * remaining
+            loss = sum((served(rj, rr, d, k0) - served(rj, rr, d, k1))
+                       * remaining for rj, rr in res_info[d])
+            cost = self._disruption_items(d) if with_disruption else 0.0
+            return (-(gain - loss - cost), load(d), len(res_info[d]), d)
+
+        return min(pool, key=score)
+
+    def _served_rate(self, job, rate: Optional[float], d: int,
+                     k: int) -> float:
+        """Demand-capped predicted steady throughput: a job never serves
+        requests it does not receive, so capacity beyond the arrival rate
+        is worth nothing to the packer."""
+        pred = self._predicted_steady(job, d, k)
+        cap = pred[0] if pred is not None else 0.0
+        return min(cap, rate) if rate is not None else cap
+
+    def _resident_info(self) -> List[List[tuple]]:
+        return [[(self.states[j].job, self.states[j].arrival_rate)
+                 for j in r] for r in self.residents]
+
+    # -- churn: admission, drain, migration ---------------------------------
+    def _charge_migration(self, j: int, d: int, k: int, *, at: float,
+                          kind: str) -> None:
+        """One migration round for state j on device d (k co-residents):
+        rebuild the executor at the new share, charge the stall to the
+        job's clock and the global counters, reset its tail window, and
+        let the controller re-seed its search."""
+        st = self.states[j]
+        spec = self.fleet[d]
+        cost = self._migration_cost(st, spec)
+        self._rebuilds += 1
+        st.executor = self._make_executor(st.job, d, k,
+                                          self.seed + 3000 + self._rebuilds)
+        st.clock += cost
+        st.epoch += 1
+        st.stall_time += cost
+        st.migration_stall_s += cost
+        st.migrations += 1
+        st.acc.total_time += cost
+        self.stall_time += cost
+        self.migration_stall_s += cost
+        self.migrations += 1
+        st.window.reset()              # the latency surface just changed
+        if hasattr(st.controller, "note_capacity_change"):
+            st.controller.note_capacity_change(st.executor)
+        self.churn_log.append((at, kind, st.job.job_id, spec.label(d)))
+        if self._heap is not None:
+            heapq.heappush(self._heap, (st.clock, j, st.epoch))
+
+    def _reshare(self, d: int, *, at: float,
+                 exclude: Optional[int] = None,
+                 optional: bool = False) -> None:
+        """Device d's resident count changed: rebuild every resident whose
+        share moved, charging each the migration cost.
+
+        `optional=True` (a drain freed share) gates each upgrade on need:
+        a resident that is keeping up — no backlog growth, tail under the
+        SLO — gains nothing from a bigger slice but would still pay the
+        relaunch stall, so it keeps serving on its old share."""
+        spec = self.fleet[d]
+        k = len(self.residents[d])
+        if k == 0:
+            return
+        _, _, new_share = self._executor_params(spec, k)
+        for j in list(self.residents[d]):
+            if j == exclude:
+                continue
+            st = self.states[j]
+            old_share = getattr(st.executor, "_cluster_share", None)
+            if old_share is not None and old_share == new_share:
+                continue               # e.g. a 4->3 drain on a (4,4) slice
+            if optional:
+                behind = (st.oq is not None and st.oq.backlog
+                          > 2 * max(st.prev.bs * st.prev.mtl, 1))
+                violating = st.window.p95 > st.job.slo_s
+                if not (behind or violating):
+                    continue
+            self._charge_migration(j, d, k, at=at, kind="migrate")
+
+    def _best_relocation_for(self, job, rate: Optional[float], at: float,
+                             direct_value: float) -> Optional[tuple]:
+        """Migration-aware re-placement at admission: consider swapping
+        ONE resident (victim v: home device dt -> destination d2) so the
+        new job takes v's slot.  The swap leaves dt's resident count
+        unchanged — v's old co-residents pay NO reshare — so the net value
+        is the new job's served rate at dt, plus the victim's served-rate
+        delta, minus what d2's residents lose to the extra tenant and the
+        one-off migration stalls.  Returns (victim idx, d2, dt) when the
+        best swap beats `direct_value` by a margin, else None."""
+        remaining = max(self._horizon - at, 0.0)
+        if not np.isfinite(remaining) or remaining <= 0.0:
+            return None
+        served = self._served_rate
+        info = self._resident_info()
+        best = None   # (value, victim idx, d2, dt)
+        for dt, spec in enumerate(self.fleet):
+            k_dt = len(self.residents[dt])
+            if k_dt == 0:
+                continue
+            # everyone on dt (minus any one victim, plus the new job) keeps
+            # the same count — feasibility only needs the new job's check
+            if (_base_latency(spec, job.profile(), k_dt)
+                    > PLACEMENT_ALPHA * job.slo_s):
+                continue
+            gain_new = served(job, rate, dt, k_dt)
+            for j in self.residents[dt]:
+                st = self.states[j]
+                v_cur = served(st.job, st.arrival_rate, dt, k_dt)
+                for d2, spec2 in enumerate(self.fleet):
+                    if d2 == dt:
+                        continue
+                    k2 = len(self.residents[d2]) + 1
+                    ok = (_base_latency(spec2, st.job.profile(), k2)
+                          <= PLACEMENT_ALPHA * st.job.slo_s
+                          and all(_base_latency(spec2, rj.profile(), k2)
+                                  <= PLACEMENT_ALPHA * rj.slo_s
+                                  for rj, _ in info[d2]))
+                    if not ok:
+                        continue
+                    v_new = served(st.job, st.arrival_rate, d2, k2)
+                    loss = sum((served(rj, rr, d2, k2 - 1)
+                                - served(rj, rr, d2, k2))
+                               for rj, rr in info[d2])
+                    one_off = (st.acc.throughput
+                               * self._migration_cost(st, spec2)
+                               + self._disruption_items(d2))
+                    value = ((gain_new + v_new - v_cur - loss) * remaining
+                             - one_off)
+                    if value > direct_value and (best is None
+                                                 or value > best[0]):
+                        best = (value, j, d2, dt)
+        if best is None:
+            return None
+        return best[1], best[2], best[3]
+
+    def _move(self, j: int, d2: int, *, at: float,
+              reshare_origin: bool = True) -> None:
+        """Relocate resident j to device d2, cascading share changes.
+
+        `reshare_origin=False` is for admission swaps: the caller refills
+        j's old slot immediately, so the origin's count never really
+        changes — upsizing the survivors now would charge them a full
+        migration stall that the admission reshare would undo one call
+        later."""
+        d = self.placement[j]
+        self.residents[d].remove(j)
+        self.residents[d2].append(j)
+        self.placement[j] = d2
+        self._charge_migration(j, d2, len(self.residents[d2]), at=at,
+                               kind="move")
+        if reshare_origin:
+            # survivors MAY upsize (only if struggling)
+            self._reshare(d, at=at, optional=True)
+        # d2 residents MUST shrink — the device is now shared more ways
+        self._reshare(d2, at=at, exclude=j)
+
+    def _rebalance(self, at: float, *, max_moves: int = 2) -> None:
+        """Drain-time re-placement: freed capacity is only worth something
+        if a struggling job moves onto it.  Greedily executes up to
+        `max_moves` single-job relocations while the best one's predicted
+        net gain — the mover's demand-capped served-rate delta, plus what
+        its old co-residents regain, minus what the destination's
+        residents lose and every one-off migration stall — is positive."""
+        if self.static_union:
+            return
+        remaining = max(self._horizon - at, 0.0)
+        if remaining <= 0.0 or not np.isfinite(remaining):
+            return
+        served = self._served_rate
+        for _ in range(max_moves):
+            info = self._resident_info()
+            best = None      # (net gain items, state idx, destination)
+            for d in range(len(self.fleet)):
+                for j in list(self.residents[d]):
+                    st = self.states[j]
+                    k_d = len(self.residents[d])
+                    cur = served(st.job, st.arrival_rate, d, k_d)
+                    old_mates = [(rj, rr) for rj, rr in info[d]
+                                 if rj is not st.job]
+                    regain = sum(
+                        (served(rj, rr, d, k_d - 1)
+                         - served(rj, rr, d, k_d))
+                        for rj, rr in old_mates)
+                    for d2, spec2 in enumerate(self.fleet):
+                        if d2 == d:
+                            continue
+                        k2 = len(self.residents[d2]) + 1
+                        ok = (_base_latency(spec2, st.job.profile(), k2)
+                              <= PLACEMENT_ALPHA * st.job.slo_s
+                              and all(_base_latency(spec2, rj.profile(), k2)
+                                      <= PLACEMENT_ALPHA * rj.slo_s
+                                      for rj, _ in info[d2]))
+                        if not ok:
+                            continue
+                        new = served(st.job, st.arrival_rate, d2, k2)
+                        if new <= cur * 1.05:
+                            continue     # hysteresis against move thrash
+                        loss = sum(
+                            (served(rj, rr, d2, k2 - 1)
+                             - served(rj, rr, d2, k2))
+                            for rj, rr in info[d2])
+                        one_off = (st.acc.throughput
+                                   * self._migration_cost(st, spec2)
+                                   + self._disruption_items(d2))
+                        net = ((new - cur + regain - loss) * remaining
+                               - one_off)
+                        if net > 0 and (best is None or net > best[0]):
+                            best = (net, j, d2)
+            if best is None:
+                return
+            self._move(best[1], best[2], at=at)
+
+    def _admit(self, entry: ChurnJob) -> int:
+        """Admit a churn arrival: incremental packing, with one
+        migration-aware relocation considered whenever direct placement
+        leaves the new job underserved (or infeasible); then charge
+        co-residents their share change."""
+        job = entry.job
+        rate = (entry.arrival_rate if entry.arrival_rate is not None
+                else self._arrival_rates.get(job.job_id))
+        info = self._resident_info()
+        d = self._choose_device(job, rate, info, at=entry.admit_s,
+                                with_disruption=True)
+        if self.anticipate:
+            k = len(self.residents[d]) + 1
+            served = self._served_rate(job, rate, d, k)
+            remaining = max(self._horizon - entry.admit_s, 0.0)
+            underserved = (rate is not None and served < 0.95 * rate) or \
+                (_base_latency(self.fleet[d], job.profile(), k)
+                 > PLACEMENT_ALPHA * job.slo_s)
+            if underserved and np.isfinite(remaining):
+                loss = sum(
+                    (self._served_rate(rj, rr, d, k - 1)
+                     - self._served_rate(rj, rr, d, k))
+                    for rj, rr in info[d])
+                direct_value = ((served - loss) * remaining
+                                - self._disruption_items(d))
+                swap = self._best_relocation_for(job, rate, entry.admit_s,
+                                                 direct_value)
+                if swap is not None:
+                    victim, d2, dt = swap
+                    self._move(victim, d2, at=entry.admit_s,
+                               reshare_origin=False)
+                    d = dt
+        i = self._spawn(entry, d, len(self.residents[d]) + 1)
+        self.residents[d].append(i)
+        self.admissions += 1
+        self.churn_log.append((entry.admit_s, "admit", job.job_id,
+                               self.fleet[d].label(d)))
+        self._reshare(d, at=entry.admit_s, exclude=i)
+        return i
+
+    def _maybe_drain(self, i: int) -> bool:
+        """Drain i once its departure time passed AND its backlog is
+        served (arrivals were already clipped at depart_s, so the backlog
+        is finite); frees its share for the co-residents."""
+        st = self.states[i]
+        if st.depart_s is None or st.clock < st.depart_s:
+            return False
+        if st.oq is not None and st.oq.queue:
+            return False
+        st.active = False
+        st.drained_at = st.clock
+        st.epoch += 1
+        d = self.placement[i]
+        if i in self.residents[d]:
+            self.residents[d].remove(i)
+        self.drains += 1
+        self.churn_log.append((st.clock, "drain", st.job.job_id,
+                               self.fleet[d].label(d)))
+        if not self.static_union:
+            self._reshare(d, at=st.clock, optional=True)
+            self._rebalance(st.clock)
+        return True
 
     # -- one serving step for one job ---------------------------------------
     def _step(self, st: _JobState) -> None:
@@ -192,7 +703,7 @@ class ClusterEngine:
         if hasattr(ctrl, "set_slo"):
             ctrl.set_slo(st.job.slo_s)
         act = ctrl.action()
-        win_start = st.clock        # arrivals keep coming during any stall
+        win_start = st.arrival_mark  # arrivals keep coming during any stall
         cost = reconfig_stall(st.prev, act, self.instance_launch_s,
                               self.instance_kill_s)
         if cost:
@@ -213,10 +724,12 @@ class ClusterEngine:
         t1 = st.clock + res["step_time"]
         slo = st.job.slo_s
         if st.oq is not None:            # open loop: queue + conservation
-            # the arrival window spans the launch/kill/compile stall too —
-            # the outside world does not pause while instances restart, and
-            # served latencies (t1 - ts) must include that wait
-            served, lats = st.oq.step(win_start, t1, act.bs * act.mtl)
+            # the arrival window spans the launch/kill/compile/migration
+            # stall too — the outside world does not pause while instances
+            # restart, and served latencies (t1 - ts) must include that
+            # wait; a draining job's window is clipped at its departure
+            served, lats = st.oq.step(win_start, t1, act.bs * act.mtl,
+                                      arrival_end=st.depart_s)
             st.completed += len(served)
             st.acc.record_step(
                 items=len(served), step_time=res["step_time"],
@@ -234,32 +747,55 @@ class ClusterEngine:
                              res["throughput"], slo))
         ctrl.observe(st.window.p95, res)
         st.clock = t1
+        st.arrival_mark = t1
         st.prev = act
 
     def run(self, *, sim_time_limit: float = 120.0,
             max_steps: int = 500_000) -> dict:
-        heap = [(st.clock, i) for i, st in enumerate(self.states)]
-        heapq.heapify(heap)
+        self._horizon = sim_time_limit
+        self._heap = [(st.clock, i, st.epoch)
+                      for i, st in enumerate(self.states) if st.active]
+        heapq.heapify(self._heap)
+        heap = self._heap
         steps = 0
-        while heap and steps < max_steps:
-            t, i = heapq.heappop(heap)
+        while steps < max_steps:
+            nxt = heap[0][0] if heap else float("inf")
+            # admissions due before the next step event re-run the packer
+            while (self._pending
+                   and self._pending[0].admit_s <= min(nxt, sim_time_limit)
+                   and self._pending[0].admit_s < sim_time_limit):
+                i = self._admit(self._pending.pop(0))
+                st = self.states[i]
+                heapq.heappush(heap, (st.clock, i, st.epoch))
+                nxt = heap[0][0]
+            if not heap:
+                break
+            t, i, ep = heapq.heappop(heap)
+            st = self.states[i]
+            if not st.active or ep != st.epoch or t != st.clock:
+                continue                 # stale entry (migrated or drained)
             if t >= sim_time_limit:
                 continue                 # this job reached the horizon
-            self.event_log.append((t, self.states[i].job.job_id))
-            self._step(self.states[i])
-            heapq.heappush(heap, (self.states[i].clock, i))
+            self.event_log.append((t, st.job.job_id))
+            self._step(st)
             steps += 1
+            if self._maybe_drain(i):
+                continue
+            heapq.heappush(heap, (st.clock, i, st.epoch))
+        self._heap = None
         return self.report()
 
     def report(self) -> dict:
-        counts = [self.placement.count(d) for d in range(len(self.fleet))]
         per_job = []
-        for st, d in zip(self.states, self.placement):
+        goodput_items = 0.0
+        for i, (st, d) in enumerate(zip(self.states, self.placement)):
             s = st.acc.summary()
             # a job is SLO-feasible on its slice iff even (bs=1, mtl=1)
             # fits under the SLO there; infeasible jobs are served
             # best-effort and flagged, not hidden
-            base = _base_latency(self.fleet[d], st.job.profile(), counts[d])
+            k = len(self.residents[d]) + (0 if i in self.residents[d] else 1)
+            base = _base_latency(self.fleet[d], st.job.profile(), max(k, 1))
+            goodput_items += st.completed * s["slo_attainment"]
             per_job.append({
                 "job_id": st.job.job_id,
                 "dnn": f"{st.job.dnn}/{st.job.dataset}",
@@ -274,6 +810,14 @@ class ClusterEngine:
                 "slo_attainment": float(s["slo_attainment"]),
                 "throughput": float(s["throughput"]),
                 "stall_s": float(st.stall_time),
+                "active": bool(st.active),
+                "admit_s": float(st.admit_s),
+                "depart_s": (float(st.depart_s)
+                             if st.depart_s is not None else None),
+                "drained_at": (float(st.drained_at)
+                               if st.drained_at is not None else None),
+                "migrations": int(st.migrations),
+                "migration_stall_s": float(st.migration_stall_s),
                 "submitted": (st.oq.submitted if st.oq is not None
                               else st.submitted),
                 "completed": st.completed,
@@ -283,6 +827,8 @@ class ClusterEngine:
         makespan = float(max((st.clock for st in self.states), default=0.0))
         completed = sum(st.completed for st in self.states)
         feasible = [r for r in per_job if r["feasible"]]
+        conserved = all(r["submitted"] == r["completed"] + r["rejected"]
+                        + r["backlog"] for r in per_job)
         return {
             "per_job": per_job,
             "aggregate": {
@@ -291,8 +837,15 @@ class ClusterEngine:
                 "makespan_s": makespan,
                 "aggregate_throughput":
                     completed / makespan if makespan else 0.0,
+                "goodput":
+                    goodput_items / makespan if makespan else 0.0,
                 "total_stall_s": float(self.stall_time),
                 "compile_stall_s": float(self.compile_stall_s),
+                "migration_stall_s": float(self.migration_stall_s),
+                "admissions": int(self.admissions),
+                "drains": int(self.drains),
+                "migrations": int(self.migrations),
+                "conserved": bool(conserved),
                 "min_attainment":
                     min((r["slo_attainment"] for r in per_job), default=1.0),
                 "feasible_jobs": len(feasible),
@@ -307,14 +860,17 @@ class ClusterEngine:
 # The first-class scenario: the paper's 30 jobs as one cluster workload.
 # ---------------------------------------------------------------------------
 def paper_controller_factory(mode: str = "auto", *, max_mtl: int = 10,
-                             library_jobs: int = 8):
+                             library_jobs: int = 8, surface=None):
     """Factory of per-job controllers for `ClusterEngine`.
 
     mode: "auto" (the paper's B-or-MT pick), "hybrid", "B", "MT" — all via
     DNNScalerController — or "clipper".  The matrix-completion estimator is
     seeded with a shared library of 'historically profiled' jobs, exactly
-    like the single-job launchers do.
-    """
+    like the single-job launchers do.  `surface` optionally shares one
+    `SurfaceLibrary` across every controller the factory makes: each
+    controller's probes feed the jobs x knobs matrix (keyed by job_id,
+    the convention `ClusterEngine._predicted_steady` queries), and new
+    controllers seed their HybridScaler from its completion."""
     from repro.core.controller import ClipperController, DNNScalerController
     from repro.core.matrix_completion import LatencyEstimator
     from repro.serving.workload import PAPER_JOBS
@@ -341,7 +897,9 @@ def paper_controller_factory(mode: str = "auto", *, max_mtl: int = 10,
                 est.add_library_row(row)   # ground-truth curve (held-out,
                                            # like build_library's exclude_id)
         return DNNScalerController(executor, job.slo_s, estimator=est,
-                                   max_mtl=cap, mode=mode)
+                                   max_mtl=cap, mode=mode,
+                                   surface_library=surface,
+                                   surface_key=job.job_id)
 
     return make
 
@@ -359,5 +917,44 @@ def run_paper_cluster(mode: str = "auto", *, jobs: Optional[Sequence] = None,
                         controller_factory=paper_controller_factory(mode),
                         arrival_rates=arrival_rates, seed=seed)
     rep = eng.run(sim_time_limit=sim_time_limit)
+    rep["aggregate"]["mode"] = mode
+    return rep
+
+
+CHURN_POLICIES = ("union", "dynamic", "surface")
+
+
+def run_churn_cluster(policy: str = "surface", *,
+                      trace: Optional[Sequence[ChurnJob]] = None,
+                      fleet: Optional[Sequence[DeviceSpec]] = None,
+                      n_devices: int = 5, horizon_s: float = 150.0,
+                      mode: str = "hybrid", seed: int = 0,
+                      trace_kwargs: Optional[dict] = None) -> dict:
+    """The churn scenario under one placement policy.
+
+    policy: "union"   — static placement over the union of every tenancy
+                        that ever appears (the over-provisioned baseline);
+            "dynamic" — online admission/draining with migration-aware
+                        re-placement anticipating the analytic steady state;
+            "surface" — dynamic plus the cross-job SurfaceLibrary (probed
+                        points pooled across jobs; new admissions seed from
+                        the soft-impute completion)."""
+    if policy not in CHURN_POLICIES:
+        raise ValueError(f"unknown churn policy {policy!r}")
+    from repro.core.matrix_completion import SurfaceLibrary
+    from repro.serving.workload import churn_trace
+    if trace is None:
+        trace = churn_trace(horizon_s=horizon_s, seed=seed,
+                            **(trace_kwargs or {}))
+    fleet = list(fleet) if fleet is not None else gpu_fleet(n_devices)
+    lib = SurfaceLibrary() if policy == "surface" else None
+    eng = ClusterEngine(
+        [], fleet, churn=trace,
+        controller_factory=paper_controller_factory(mode, surface=lib),
+        static_union=(policy == "union"),
+        anticipate=(policy != "union"),
+        surface_library=lib, seed=seed)
+    rep = eng.run(sim_time_limit=horizon_s)
+    rep["aggregate"]["policy"] = policy
     rep["aggregate"]["mode"] = mode
     return rep

@@ -176,6 +176,27 @@ def mt_throughput_grid(dev: Device, prof: JobProfile, bs, mtl) -> np.ndarray:
     return (m_ * bs_) / mt_latency_grid(dev, prof, bs, mtl)
 
 
+def best_feasible_point(latency_s, bs_values, mtl_values,
+                        limit_s: float) -> Optional[tuple]:
+    """Throughput-optimal grid point under a latency limit.
+
+    `latency_s[i, j]` prices (bs_values[i], mtl_values[j]); returns
+    (throughput, bs, mtl) for the feasible point maximizing bs*mtl/lat,
+    or None when nothing fits — the one selection shared by steady-state
+    anticipation (cluster placement), arrival-rate calibration
+    (workload.steady_capacity), and the HybridScaler's surface jump."""
+    lat = np.asarray(latency_s, np.float64)
+    bs_values = np.asarray(bs_values)
+    mtl_values = np.asarray(mtl_values)
+    ok = lat <= limit_s
+    if not ok.any():
+        return None
+    thr = np.where(ok, (bs_values[:, None] * mtl_values[None, :]) / lat,
+                   0.0)
+    i, j = np.unravel_index(int(np.argmax(thr)), thr.shape)
+    return float(thr[i, j]), int(bs_values[i]), int(mtl_values[j])
+
+
 def power(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
     lat = mt_latency(dev, prof, bs, mtl)
     gpu_busy = bs * gpu_img_ms(prof, bs, dev) * mtl / 1e3

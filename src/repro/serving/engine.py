@@ -67,13 +67,19 @@ class OpenLoopQueue:
     def backlog(self) -> int:
         return len(self.queue)
 
-    def step(self, win_start: float, t_end: float, capacity: int) -> tuple:
+    def step(self, win_start: float, t_end: float, capacity: int,
+             arrival_end: Optional[float] = None) -> tuple:
         """Arrivals over [win_start, t_end] — the window spans any
         launch/kill or compile stall, because the outside world does not
         pause while instances restart — then overflow, then serve up to
         `capacity` oldest requests.  Returns (served timestamps,
-        end-to-end latencies)."""
-        window = t_end - win_start
+        end-to-end latencies).
+
+        `arrival_end` clips the arrival window (a draining job stops
+        receiving requests at its departure time even while it is still
+        serving down its backlog); service still completes at `t_end`."""
+        a_end = t_end if arrival_end is None else min(t_end, arrival_end)
+        window = max(a_end - win_start, 0.0)
         n_arr = int(self.rng.poisson(self.rate_fn(win_start) * window))
         self.submitted += n_arr
         if n_arr:

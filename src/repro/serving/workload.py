@@ -1,10 +1,13 @@
-"""Workloads: the paper's 30-job table (Table 4) plus LLM serving jobs built
-from the assigned architectures."""
+"""Workloads: the paper's 30-job table (Table 4), LLM serving jobs built
+from the assigned architectures, and online churn traces (jobs that arrive
+and depart mid-run — the regime ClusterEngine's dynamic mode serves)."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
+
+import numpy as np
 
 from repro.serving import device_model as dm
 
@@ -17,12 +20,17 @@ class Job:
     slo_ms: float
     paper_method: Optional[str] = None   # what the paper's Table 4 chose
     paper_steady: Optional[int] = None   # steady BS or MTL in Table 4
+    # LLM / synthetic jobs carry their profile directly instead of the
+    # Table-5 calibration lookup
+    profile_override: Optional[dm.JobProfile] = None
 
     @property
     def slo_s(self) -> float:
         return self.slo_ms / 1e3
 
     def profile(self) -> dm.JobProfile:
+        if self.profile_override is not None:
+            return self.profile_override
         return dm.paper_profile(self.dnn, self.dataset)
 
 
@@ -72,3 +80,93 @@ def llm_jobs(slo_scale: float = 4.0):
         base = step_latency(TPU_V5E, prof, 1)["t_step"]
         jobs.append((arch, prof, base * slo_scale))
     return jobs
+
+
+def llm_serving_jobs(slo_scale: float = 4.0, *, job_id_base: int = 900,
+                     archs: Optional[Sequence[str]] = None) -> List[Job]:
+    """The assigned-architecture decode jobs as first-class `Job`s, so churn
+    traces can mix them into the Table-4 pool.  The SLO is `slo_scale` x the
+    single-stream decode step on a whole TPU v5e — generous enough that the
+    job stays feasible on a fractional slice."""
+    from repro.configs.base import get_config
+    picked = list(archs) if archs is not None else \
+        ["smollm-360m", "gemma2-2b", "mamba2-1p3b"]
+    jobs = []
+    for i, arch in enumerate(picked):
+        cfg = get_config(arch)
+        prof = dm.llm_profile(cfg, mode="decode")
+        base = dm.step_latency(dm.TPU_V5E, prof, 1)["t_step"]
+        jobs.append(Job(job_id=job_id_base + i, dnn=cfg.name, dataset="decode",
+                        slo_ms=base * slo_scale * 1e3, profile_override=prof))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# Online churn traces: per-job admit/depart times over a horizon.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChurnJob:
+    """One serving tenancy in a churn trace: a job that arrives at
+    `admit_s`, departs at `depart_s` (None = stays to the horizon), and —
+    in open-loop mode — receives Poisson arrivals at `arrival_rate`/s
+    strictly inside its [admit_s, depart_s) lifetime."""
+
+    job: Job
+    admit_s: float = 0.0
+    depart_s: Optional[float] = None
+    arrival_rate: Optional[float] = None
+
+
+def steady_capacity(job: Job, *, share: float = 1.0,
+                    alpha: float = 0.85) -> float:
+    """SLO-feasible steady throughput of `job` on a `share`-sized slice of
+    its natural device: the best (bs, mtl) grid point whose analytic
+    latency fits under alpha*SLO.  Falls back to the single-stream rate
+    when even (1, 1) violates (the job is served best-effort anyway)."""
+    prof = job.profile()
+    dev = dm.TPU_V5E if job.profile_override is not None else dm.TESLA_P40
+    if share < 1.0:
+        dev = dev.share(share)
+    bs = np.array([1, 2, 4, 8, 16, 32, 64, 128])
+    mtl = np.arange(1, 11)
+    lat = dm.mt_latency_grid(dev, prof, bs, mtl)
+    best = dm.best_feasible_point(lat, bs, mtl, alpha * job.slo_s)
+    if best is None:
+        return 1.0 / dm.batch_latency(dev, prof, 1)
+    return best[0]
+
+
+def churn_trace(*, horizon_s: float = 150.0, n_initial: int = 4,
+                n_churn: int = 12, mean_lifetime_s: float = 30.0,
+                load: float = 0.6, include_llm: bool = True,
+                pool: Optional[Sequence[Job]] = None,
+                seed: int = 0) -> List[ChurnJob]:
+    """Sample a churn trace from the Table-4 pool (plus the LLM decode jobs).
+
+    `n_initial` jobs are present at t=0; `n_churn` more arrive uniformly
+    over the first 70% of the horizon.  Lifetimes are exponential with mean
+    `mean_lifetime_s`; a lifetime reaching past the horizon means the job
+    never departs.  Every sampled tenancy gets a fresh unique job_id so
+    re-picks of the same Table-4 row are distinct tenants.
+
+    Each tenancy's Poisson arrival rate is `load` x its SLO-feasible
+    steady capacity on a FULL device (`steady_capacity`).  At load ~0.6 a
+    job needs well over half a device to keep up — a static union
+    placement that thins every share to 1/k is physically unable to serve
+    the demand, which is exactly the slack online re-placement harvests."""
+    rng = np.random.default_rng(seed)
+    candidates = list(pool) if pool is not None else list(PAPER_JOBS)
+    if include_llm and pool is None:
+        candidates = candidates + llm_serving_jobs()
+    trace: List[ChurnJob] = []
+    for k in range(n_initial + n_churn):
+        base = candidates[int(rng.integers(len(candidates)))]
+        job = dataclasses.replace(base, job_id=1000 + k)
+        admit = 0.0 if k < n_initial else \
+            float(rng.uniform(0.0, 0.7 * horizon_s))
+        life = float(rng.exponential(mean_lifetime_s))
+        depart = admit + life if admit + life < horizon_s else None
+        trace.append(ChurnJob(job=job, admit_s=admit, depart_s=depart,
+                              arrival_rate=load * steady_capacity(job)))
+    trace.sort(key=lambda e: e.admit_s)
+    return trace

@@ -1,0 +1,45 @@
+"""Golden perf regression tests against the committed BENCH_*.json
+baselines: the churn refactor (or any future one) must not silently shift
+the static 30-job cluster numbers, and the churn suite's own baseline is
+pinned the same way.  Uses the same comparison as
+``python -m benchmarks.run --check`` so the gate is identical in CI and
+on the command line."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.run import _parse_metrics, check_against
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _committed(suite):
+    path = os.path.join(REPO, f"BENCH_{suite}.json")
+    assert os.path.exists(path), f"missing committed baseline {path}"
+    return json.load(open(path))
+
+
+def test_parse_metrics():
+    m = _parse_metrics("thr=2362.9/s,meet_slo=12/12,stall=158.6s")
+    assert m["thr"] == pytest.approx(2362.9)
+    assert m["stall"] == pytest.approx(158.6)
+    assert _parse_metrics("x1.21") == {}
+
+
+@pytest.mark.slow
+def test_static_cluster_bench_matches_committed_baseline():
+    """Re-run the 30-job static cluster bench and hold every throughput
+    row within tolerance of the committed BENCH_cluster.json — the churn
+    refactor must leave the static baseline untouched."""
+    committed = _committed("cluster")
+    baseline = {r["name"]: _parse_metrics(r["derived"])
+                for r in committed["rows"]}
+    assert any("thr" in v for v in baseline.values())
+    assert check_against(REPO, tol=0.10, only={"cluster"}) == 0
+
+
+@pytest.mark.slow
+def test_churn_bench_matches_committed_baseline():
+    assert check_against(REPO, tol=0.10, only={"churn"}) == 0
