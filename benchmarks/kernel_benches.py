@@ -20,6 +20,13 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
+def _maxerr(a, b) -> float:
+    """Max abs deviation pallas vs reference — the deterministic metric
+    ``--check`` gates the kernels suite on (wall clocks are too noisy)."""
+    return float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                 - jnp.asarray(b, jnp.float32))))
+
+
 def bench_kernels():
     # baseline rows pin the HARD-CODED tile defaults explicitly, so their
     # numbers stay comparable across runs whether or not the autotune cache
@@ -37,8 +44,12 @@ def bench_kernels():
         a, b, c, causal=True, **autotune.DEFAULTS["flash_attention"]), q, k, v)
     t_ref = _time(jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True)),
                   q, k, v)
+    err = _maxerr(flash_attention(q, k, v, causal=True,
+                                  **autotune.DEFAULTS["flash_attention"]),
+                  attention_ref(q, k, v, causal=True))
     rows.append(("kernel/flash_attention/1k", t_pl * 1e6,
-                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret)"))
+                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret),"
+                 f"maxerr={err:.3e}"))
 
     from repro.kernels.decode_attention.ops import decode_attention
     from repro.kernels.decode_attention.ref import decode_attention_ref
@@ -51,8 +62,12 @@ def bench_kernels():
         a, b, c, pos, **autotune.DEFAULTS["decode_attention"]), q1, kc, vc)
     t_ref = _time(jax.jit(lambda a, b, c: decode_attention_ref(a, b, c, pos)),
                   q1, kc, vc)
+    err = _maxerr(decode_attention(q1, kc, vc, pos,
+                                   **autotune.DEFAULTS["decode_attention"]),
+                  decode_attention_ref(q1, kc, vc, pos))
     rows.append(("kernel/decode_attention/4k", t_pl * 1e6,
-                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret)"))
+                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret),"
+                 f"maxerr={err:.3e}"))
 
     from repro.kernels.ssd_scan.ops import ssd_scan
     from repro.kernels.ssd_scan.ref import ssd_ref
@@ -65,8 +80,11 @@ def bench_kernels():
     Cm = jax.random.normal(kk[4], (B2, T2, N)) * 0.5
     t_pl = _time(lambda *a: ssd_scan(*a, chunk=128), x, dt, A, Bm, Cm)
     t_ref = _time(jax.jit(ssd_ref), x, dt, A, Bm, Cm)
+    err = _maxerr(ssd_scan(x, dt, A, Bm, Cm, chunk=128)[0],
+                  ssd_ref(x, dt, A, Bm, Cm)[0])
     rows.append(("kernel/ssd_scan/512", t_pl * 1e6,
-                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret)"))
+                 f"interpret_vs_ref=x{t_pl / t_ref:.2f}(CPU-interpret),"
+                 f"maxerr={err:.3e}"))
 
     # -- autotuned vs hard-coded tilings on the exact bench tensors ---------
     # (tune() fills the persistent cache for these shape classes; the timed

@@ -13,6 +13,9 @@ metrics row by row against the baseline, exiting nonzero on any >10%
 regression (``--check-tol`` to change).  Wall-clock rows (us_per_call)
 are NOT gated — they are too noisy across machines; the gated metrics
 come from the simulated-time engines and are deterministic per seed.
+The kernels suite is gated on its ``maxerr=`` rows (pallas vs reference
+max abs error — a lower-is-better envelope; see ``_LOWER_METRICS``) plus
+row presence, not on its wall-clock timings.
 
 Suites (one per paper table/figure — DESIGN.md §8):
   fig1          BS / MTL sweeps (preliminary study)
@@ -95,6 +98,14 @@ def _autotune_delta(before: dict, after: dict) -> dict:
 # (wall-clock us_per_call rows are informational only — too noisy to gate)
 _CHECKED_METRICS = ("thr", "goodput")
 
+# lower-is-better gated metrics: numeric-accuracy rows (the kernels suite's
+# pallas-vs-reference max abs error).  These are deterministic per seed on
+# one machine but float arithmetic differs slightly across CPUs/XLA
+# versions, so the gate is a generous (ratio, absolute-floor) envelope:
+# regression iff fresh > ratio * baseline + floor — catching a kernel that
+# went numerically wrong, not a last-ulp wobble.
+_LOWER_METRICS = {"maxerr": (4.0, 1e-6)}
+
 
 def _parse_metrics(derived) -> dict:
     """``k=<float><unit>`` pairs out of a derived string."""
@@ -122,11 +133,12 @@ def check_against(base_dir: str, *, tol: float = 0.10,
         suite = committed.get("suite")
         if suite not in table or (only and suite not in only):
             continue
+        gated = _CHECKED_METRICS + tuple(_LOWER_METRICS)
         if not any(m in _parse_metrics(r.get("derived", ""))
                    for r in committed.get("rows", [])
-                   for m in _CHECKED_METRICS):
+                   for m in gated):
             continue    # nothing gated in this baseline (wall-clock-only
-            #             suites like kernels): don't burn time re-running
+            #             suites): don't burn time re-running
         try:
             fresh_rows = table[suite]()
         except Exception as e:  # noqa: BLE001
@@ -155,6 +167,20 @@ def check_against(base_dir: str, *, tol: float = 0.10,
                           f"{metric} {base[metric]:.1f} -> "
                           f"{got[metric]:.1f} "
                           f"({got[metric] / base[metric] - 1.0:+.1%})")
+                    regressions += 1
+            for metric, (ratio, floor) in _LOWER_METRICS.items():
+                if metric not in base:
+                    continue
+                checked += 1
+                if metric not in got:
+                    print(f"CHECK {suite}: {row['name']} lost "
+                          f"metric {metric}")
+                    regressions += 1
+                elif got[metric] > ratio * base[metric] + floor:
+                    print(f"CHECK {suite}: REGRESSION {row['name']} "
+                          f"{metric} {base[metric]:.2e} -> "
+                          f"{got[metric]:.2e} (limit "
+                          f"{ratio * base[metric] + floor:.2e})")
                     regressions += 1
     print(f"CHECK: {checked} metrics compared, {regressions} regressions "
           f"(tolerance {tol:.0%})")

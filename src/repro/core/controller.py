@@ -53,6 +53,10 @@ class DNNScalerController:
         self.surface_key = surface_key
         self.profiler = Profiler(executor, m=m, n=n)
         self.profile: ProfileResult = self.profiler.probe()
+        # distinct (bs, mtl) operating points this controller has tried —
+        # the probing cost the cross-run profile store amortizes away; a
+        # warm-started controller must reach steady state with fewer
+        self.probed_points = {(1, 1), (m, 1), (1, n)}
         if surface_library is not None:
             # the profiler's three points — (1,1), (m,1), (1,n) — are free
             # observations for the shared surface (paper: profiling points
@@ -174,8 +178,14 @@ class DNNScalerController:
             self._seed_scaler_surface(executor if executor is not None
                                       else self.profiler.executor)
 
+    @property
+    def probe_count(self) -> int:
+        return len(self.probed_points)
+
     def action(self) -> Action:
-        return self.scaler.action()
+        act = self.scaler.action()
+        self.probed_points.add((act.bs, act.mtl))
+        return act
 
     def observe(self, p95: float, result: Optional[dict] = None) -> None:
         if self.surface_library is not None and result is not None:

@@ -79,6 +79,10 @@ class SurfaceLibrary:
         self._version: dict = {}          # key -> bumped on every change
         self._pred_cache: dict = {}       # key -> (versions-fingerprint, est)
         self.observations = 0             # on-grid points recorded (total)
+        self.last_reject = None           # why the last predict() said None:
+        #                                   "points" | "base" | "rows" | "loo"
+        #                                   (drives load-time eviction in the
+        #                                   cross-run profile store)
 
     @property
     def shape(self) -> tuple:
@@ -121,6 +125,39 @@ class SurfaceLibrary:
         mean = np.where(mask, self._sum[key] / np.maximum(cnt, 1), 0.0)
         return mean, mask
 
+    def export_row(self, key) -> Optional[tuple]:
+        """(latency-sum grid, sample-count grid) copies for persistence,
+        or None for an unknown key."""
+        if key not in self._sum:
+            return None
+        return self._sum[key].copy(), self._cnt[key].copy()
+
+    def import_row(self, key, sum_, cnt) -> bool:
+        """Install a persisted row (e.g. a prior run's tenancy reloaded
+        from the profile store).  Grid-shape and sanity checked; merges
+        into an existing row of the same key.  Returns False (and imports
+        nothing) on malformed input."""
+        try:
+            sum_ = np.asarray(sum_, np.float64)
+            cnt = np.asarray(cnt, np.int64)
+        except (TypeError, ValueError):
+            return False
+        if sum_.shape != self.shape or cnt.shape != self.shape:
+            return False
+        if (cnt < 0).any() or not np.isfinite(sum_).all():
+            return False
+        mask = cnt > 0
+        if (sum_[mask] <= 0).any():
+            return False
+        if key not in self._sum:
+            self._sum[key] = np.zeros(self.shape)
+            self._cnt[key] = np.zeros(self.shape, dtype=np.int64)
+        self._sum[key] += np.where(mask, sum_, 0.0)
+        self._cnt[key] += cnt
+        self._version[key] = self._version.get(key, 0) + 1
+        self.observations += int(mask.sum())
+        return True
+
     def predict(self, key) -> Optional[tuple]:
         """(completed mean-latency surface, support mask) for `key`, the
         surface de-normalized by the job's own observed (1, 1) point.
@@ -139,10 +176,12 @@ class SurfaceLibrary:
         points is held out in turn and must be recovered within `loo_tol`
         relative error.  A job with no architecturally similar history
         gets None instead of a fabricated surface."""
+        self.last_reject = "points"
         if self.n_points(key) < max(self.min_points, 1):
             return None
         mean, mask = self.row(key)
         if not mask[0, 0]:
+            self.last_reject = "base"
             return None                   # need the normalizer
         t_norm = np.ravel(mean / mean[0, 0])
         t_mask = np.ravel(mask)
@@ -163,6 +202,7 @@ class SurfaceLibrary:
             if err <= self.sim_tol:
                 others.append((err, k, r_norm, r_mask))
         if len(others) < self.min_rows:
+            self.last_reject = "rows"
             return None
         others.sort(key=lambda e: e[0])
         others = others[:self.max_sim_rows]
@@ -171,6 +211,7 @@ class SurfaceLibrary:
                        sum(self._version.get(k, 0) for _, k, _, _ in others))
         cached = self._pred_cache.get(key)
         if cached is not None and cached[0] == fingerprint:
+            self.last_reject = cached[2] if len(cached) > 2 else None
             return cached[1]
         # complete in LOG space: latency surfaces are near-multiplicative
         # families (host x batch x tenancy factors), so their logs are
@@ -210,7 +251,8 @@ class SurfaceLibrary:
             pred = complete(loo)[ix]
             actual = t_norm[ix]
             if abs(pred - actual) > self.loo_tol * abs(actual):
-                self._pred_cache[key] = (fingerprint, None)
+                self.last_reject = "loo"
+                self._pred_cache[key] = (fingerprint, None, "loo")
                 return None
 
         est = complete(t_mask).reshape(self.shape)
@@ -231,7 +273,8 @@ class SurfaceLibrary:
             np.maximum.accumulate(np.maximum.accumulate(
                 np.flip(np.flip(pooled, 0), 1), axis=0), axis=1), 0), 1)
         result = (est, support)
-        self._pred_cache[key] = (fingerprint, result)
+        self.last_reject = None
+        self._pred_cache[key] = (fingerprint, result, None)
         return result
 
 

@@ -116,6 +116,41 @@ def churn_tables(reports: dict) -> str:
     return "\n".join(parts)
 
 
+def profile_store_tables(store) -> str:
+    """Markdown summary of a cross-run profile store: what knowledge the
+    next run starts with (tuned tiles + generation, persisted surface
+    rows, migration calibrations)."""
+    import numpy as np
+    s = store.stats()
+    parts = [f"_store `{s['root']}` (schema {s['schema']}, tuned-tile "
+             f"generation {s['generations'].get('autotune', 0)}, "
+             f"{s['sections'].get('autotune', 0)} autotune entries)_\n"]
+    surfaces = store.section("surfaces")
+    if surfaces:
+        parts.append("| surface row | device class | points | autotune gen |")
+        parts.append("|---|---|---|---|")
+        for sk in sorted(surfaces):
+            r = surfaces[sk]
+            parts.append(f"| {r.get('signature', sk)} | "
+                         f"{r.get('device_class', '?')} | "
+                         f"{r.get('points', '?')} | "
+                         f"{r.get('autotune_generation', '?')} |")
+    migrations = store.section("migrations")
+    if migrations:
+        parts.append("\n| migration calibration | samples | p50 | p90 |")
+        parts.append("|---|---|---|---|")
+        for mk in sorted(migrations):
+            samples = [x for x in migrations[mk].get("samples", [])
+                       if isinstance(x, (int, float))]
+            if not samples:
+                continue
+            parts.append(
+                f"| {mk} | {len(samples)} | "
+                f"{float(np.quantile(samples, 0.5)) * 1e3:.1f}ms | "
+                f"{float(np.quantile(samples, 0.9)) * 1e3:.1f}ms |")
+    return "\n".join(parts)
+
+
 def collect_summary(recs: dict, variant: str) -> str:
     n = {"OK": 0, "SKIP": 0, "FAIL": 0}
     for (a, s, m, v), r in recs.items():
@@ -132,6 +167,9 @@ def main() -> None:
                     help="cluster_serve.py --json output to tabulate")
     ap.add_argument("--churn", default=None,
                     help="cluster_churn.py --json output to tabulate")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="cross-run profile store dir to summarize "
+                         "(perf.profile_store)")
     ap.add_argument("--out", default="experiments/roofline_tables.md")
     args = ap.parse_args()
 
@@ -158,6 +196,10 @@ def main() -> None:
         parts.append("\n### Online churn — admission/draining with "
                      "migration-aware re-placement\n")
         parts.append(churn_tables(json.load(open(args.churn))))
+    if args.store:
+        from repro.perf.profile_store import ProfileStore
+        parts.append("\n### Cross-run profile store\n")
+        parts.append(profile_store_tables(ProfileStore(args.store)))
 
     text = "\n".join(parts) + "\n"
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -16,6 +16,7 @@ whole 30-job Table-4 trace on a simulated cluster.
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +42,15 @@ def build_library(estimator: LatencyEstimator, exclude_id: int) -> None:
 
 
 def make_controller(name: str, executor, slo_s: float, job_id: int = -1,
-                    bs: int = 1, mtl: int = 1):
+                    bs: int = 1, mtl: int = 1, *, surface_library=None,
+                    surface_key=None):
     if name in ("dnnscaler", "hybrid"):
         est = LatencyEstimator(max_mtl=10)
         build_library(est, job_id)
         mode = "hybrid" if name == "hybrid" else "auto"
-        return DNNScalerController(executor, slo_s, estimator=est, mode=mode)
+        return DNNScalerController(executor, slo_s, estimator=est, mode=mode,
+                                   surface_library=surface_library,
+                                   surface_key=surface_key)
     if name == "clipper":
         return ClipperController(slo_s)
     return StaticController(bs=bs, mtl=mtl)
@@ -106,12 +110,28 @@ def main() -> None:
                          "persistent autotune cache; otherwise cache-only)")
     ap.add_argument("--autotune-cache-dir", default=None, metavar="DIR",
                     help="autotune cache location (default: "
-                         "$REPRO_AUTOTUNE_CACHE or ./.autotune_cache)")
+                         "$REPRO_AUTOTUNE_CACHE, $REPRO_PROFILE_STORE, or "
+                         "./.profile_store)")
+    ap.add_argument("--profile-store", default=None, metavar="DIR",
+                    help="cross-run profile store: reload persisted "
+                         "surface rows / migration calibrations before "
+                         "serving and persist this run's probing "
+                         "afterwards (warm start; see perf.profile_store)")
     args = ap.parse_args()
 
     from repro.perf import autotune
     autotune.configure(cache_dir=args.autotune_cache_dir,
                        tune_on_miss=args.autotune or None)
+    store = None
+    if args.profile_store is not None:
+        from repro.perf.profile_store import ProfileStore
+        store = ProfileStore(args.profile_store)
+        if args.autotune_cache_dir is None and \
+                not os.environ.get("REPRO_AUTOTUNE_CACHE"):
+            # one store for all three artifacts: the tuned-tile
+            # generation that staleness-gates the persisted surface rows
+            # must come from the SAME document the rows live in
+            autotune.configure(cache_dir=args.profile_store)
 
     if args.churn:
         from repro.serving.cluster import run_churn_cluster
@@ -121,7 +141,7 @@ def main() -> None:
         rep = run_churn_cluster(args.churn_policy, mode=mode,
                                 n_devices=args.devices or 5,
                                 horizon_s=args.seconds or 150.0,
-                                seed=args.seed)
+                                seed=args.seed, profile_store=store)
         agg = rep["aggregate"]
         assert agg["conserved"], "request conservation violated"
         print(f"churn[{args.churn_policy}/{mode}]: {agg['jobs']} tenancies "
@@ -131,6 +151,15 @@ def main() -> None:
               f"{agg['migrations']} migrations "
               f"({agg['migration_stall_s']:.1f}s stalls), "
               f"conservation OK")
+        if store is not None:
+            s = store.stats()
+            print(f"  profile store {s['root']}: "
+                  f"{rep['aggregate'].get('store_rows_loaded', 0)} rows "
+                  f"loaded / {rep['aggregate'].get('store_rows_evicted', 0)} "
+                  f"evicted on load; now "
+                  f"{s['sections'].get('surfaces', 0)} surface rows, "
+                  f"{s['sections'].get('migrations', 0)} migration "
+                  f"calibrations")
         return
 
     if args.cluster:
@@ -173,7 +202,20 @@ def main() -> None:
         executor, cfg = real_executor_for(args.arch, args.tiny)
         base = executor.mean_latency(1, 1)
         slo = args.slo_ms / 1e3 if args.slo_ms else base * 4
-        ctrl = make_controller(args.controller, executor, slo)
+        lib = surface_key = None
+        if store is not None and args.controller in ("dnnscaler", "hybrid"):
+            # cross-run warm start: prior runs of this architecture seed
+            # the scaler through the persisted shared surface
+            from repro.core.matrix_completion import SurfaceLibrary
+            from repro.perf import autotune as _at
+            lib = SurfaceLibrary()
+            surface_key = f"{cfg.name}/serve"
+            res = store.load_surfaces(lib, device_class="host-cpu",
+                                      autotune_generation=_at.generation())
+            print(f"profile store: {len(res['loaded'])} surface rows "
+                  f"loaded, {len(res['evicted'])} evicted")
+        ctrl = make_controller(args.controller, executor, slo,
+                               surface_library=lib, surface_key=surface_key)
         engine = ServingEngine(executor, slo, instance_launch_s=0.2)
         label = f"{cfg.name} (real)"
     else:
@@ -205,6 +247,18 @@ def main() -> None:
               f"(hit rate {cs.hit_rate:.2f})  compile "
               f"{cs.compile_time_s:.2f}s charged "
               f"{s['compile_stall_s']:.2f}s")
+    if hasattr(ctrl, "probe_count"):
+        print(f"  probes: {ctrl.probe_count} distinct (bs, mtl) points")
+    if store is not None and getattr(ctrl, "surface_library", None) is not None:
+        from repro.perf import autotune as _at
+        wrote = store.persist_surface(
+            ctrl.surface_library, ctrl.surface_key,
+            signature=ctrl.surface_key, device_class="host-cpu",
+            autotune_generation=_at.generation())
+        store.save()
+        print(f"  profile store: surface row "
+              f"{'persisted' if wrote else 'too sparse to persist'} "
+              f"({store.path})")
 
 
 if __name__ == "__main__":

@@ -14,13 +14,19 @@ safe: on CPU the kernels run in Pallas interpret mode, which is exactly
 what CI exercises — the cache key carries the backend, so CPU-tuned
 entries never leak onto a TPU.
 
-Results persist as JSON under a configurable cache dir
-(``REPRO_AUTOTUNE_CACHE`` env var, ``configure(cache_dir=...)``, or
-``.autotune_cache/`` in the working directory).  The ``kernels/*/ops.py``
-wrappers consult ``lookup(...)`` when the caller does not pass explicit
-tile kwargs: explicit kwargs always win, an empty cache falls back to the
-historical hard-coded defaults, and ``tune_on_miss`` (off by default — CI
-must not spend minutes tuning) lets ``--autotune`` runs fill the cache.
+Results persist in the cross-run profile store (``perf.profile_store``):
+the ``autotune`` section of ``profile_store.json`` under
+``configure(cache_dir=...)``, the ``REPRO_AUTOTUNE_CACHE`` env var (legacy
+override), ``REPRO_PROFILE_STORE``, or ``.profile_store/`` in the working
+directory — a legacy ``autotune_cache.json`` found in the same directory
+is imported once on first touch.  Every persisted tuning bumps the store's
+``autotune`` *generation* (``generation()``); the RealExecutor keys its
+AOT executable cache on it, so a new tuning invalidates stale executables.
+The ``kernels/*/ops.py`` wrappers consult ``lookup(...)`` when the caller
+does not pass explicit tile kwargs: explicit kwargs always win, an empty
+cache falls back to the historical hard-coded defaults, and
+``tune_on_miss`` (off by default — CI must not spend minutes tuning) lets
+``--autotune`` runs fill the cache.
 """
 
 from __future__ import annotations
@@ -32,13 +38,14 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.perf import profile_store
 from repro.perf.roofline import HBM_BW, PEAK_FLOPS
 
 VMEM_BYTES = 16 * 2 ** 20       # per-core VMEM budget (TPU v5e)
 PRUNE_RATIO = 3.0               # keep candidates within this factor of the
                                 # best modeled bound time
-DEFAULT_CACHE_DIR = ".autotune_cache"
-_CACHE_FILE = "autotune_cache.json"
+DEFAULT_CACHE_DIR = profile_store.DEFAULT_STORE_DIR
+_LEGACY_CACHE_FILE = "autotune_cache.json"
 
 # Historical hard-coded defaults — the fallback when the cache is empty,
 # and always kept in the candidate set so tuning can only improve on them.
@@ -52,7 +59,7 @@ _state = {
     "cache_dir": None,            # resolved lazily (env var wins)
     "tune_on_miss": False,
     "enabled": True,
-    "mem": None,                  # in-memory mirror of the JSON cache
+    "legacy_checked": None,       # root whose legacy file was imported
     "hits": 0,
     "misses": 0,
     "timings": 0,                 # individual candidate timings run
@@ -66,7 +73,8 @@ def configure(cache_dir: Optional[str] = None,
     """Set autotuner behavior; any argument left None is unchanged."""
     if cache_dir is not None:
         _state["cache_dir"] = cache_dir
-        _state["mem"] = None      # re-read from the new location
+        _state["legacy_checked"] = None
+        _store().reload()         # re-read from the (possibly new) location
     if tune_on_miss is not None:
         _state["tune_on_miss"] = tune_on_miss
     if enabled is not None:
@@ -75,18 +83,30 @@ def configure(cache_dir: Optional[str] = None,
 
 def cache_dir() -> str:
     return (_state["cache_dir"] or os.environ.get("REPRO_AUTOTUNE_CACHE")
-            or DEFAULT_CACHE_DIR)
+            or profile_store.default_root())
 
 
 def cache_path() -> str:
-    return os.path.join(cache_dir(), _CACHE_FILE)
+    return os.path.join(cache_dir(), profile_store.STORE_FILE)
+
+
+def _store() -> profile_store.ProfileStore:
+    return profile_store.store_for(cache_dir())
+
+
+def generation() -> int:
+    """The resident tuned-tile generation: bumped on every persisted
+    tuning.  The RealExecutor folds it into its AOT executable-cache key
+    so a new tuning invalidates stale executables."""
+    return _store().generation("autotune")
 
 
 def cache_stats() -> dict:
     mem = _load()
     return {"entries": len(mem), "hits": _state["hits"],
             "misses": _state["misses"], "timings": _state["timings"],
-            "tunes": _state["tunes"], "cache_dir": cache_dir()}
+            "tunes": _state["tunes"], "generation": generation(),
+            "cache_dir": cache_dir()}
 
 
 def reset_counters() -> None:
@@ -94,32 +114,26 @@ def reset_counters() -> None:
 
 
 def _load() -> dict:
-    if _state["mem"] is None:
+    """The autotune section of the profile store, importing a legacy
+    pre-store ``autotune_cache.json`` sitting in the same directory once
+    (earlier PRs' tuned tiles keep working after the migration)."""
+    store = _store()
+    sec = store.section("autotune")
+    if not sec and _state["legacy_checked"] != store.root:
+        _state["legacy_checked"] = store.root
         try:
-            with open(cache_path()) as f:
-                _state["mem"] = json.load(f)
+            with open(os.path.join(cache_dir(), _LEGACY_CACHE_FILE)) as f:
+                legacy = json.load(f)
         except (OSError, ValueError):
-            _state["mem"] = {}
-    return _state["mem"]
+            legacy = None
+        if isinstance(legacy, dict):
+            for k, v in legacy.items():
+                store.put("autotune", k, v)
+    return sec
 
 
 def _save() -> None:
-    """Merge-and-replace: re-read the file so concurrent tuners' entries
-    survive (ours win on key collision), then write atomically so a reader
-    never sees a half-written cache."""
-    os.makedirs(cache_dir(), exist_ok=True)
-    merged: dict = {}
-    try:
-        with open(cache_path()) as f:
-            merged = json.load(f)
-    except (OSError, ValueError):
-        pass
-    merged.update(_state["mem"])
-    _state["mem"] = merged
-    tmp = cache_path() + f".tmp.{os.getpid()}"
-    with open(tmp, "w") as f:
-        json.dump(merged, f, indent=2, sort_keys=True)
-    os.replace(tmp, cache_path())
+    _store().save()
 
 
 def _backend() -> str:
@@ -376,5 +390,8 @@ def tune(kernel: str, dtype: str = "float32", *, force: bool = False,
         "candidates_timed": timed,
     }
     mem[key] = entry
+    # a new tuning invalidates AOT executables compiled under older tiles:
+    # bumping the generation makes RealExecutor's cache key miss them
+    _store().bump_generation("autotune")
     _save()
     return entry

@@ -51,10 +51,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.perf import autotune
 from repro.serving import device_model as dm
 from repro.serving import tenancy
 from repro.serving.engine import Action, OpenLoopQueue, reconfig_stall
@@ -156,6 +158,10 @@ class _JobState:
         #                                outside a step (stale-heap guard)
         self.migrations = 0
         self.migration_stall_s = 0.0
+        self.migration_modeled_s = 0.0  # what the modeling defaults would
+        #                                 have charged (vs the calibrated
+        #                                 stalls actually charged)
+        self.measured_migration_s = 0.0  # instrumented kill+relaunch wall
         self.prev = Action(bs=1, mtl=1)
         self.stall_time = 0.0
         self.arrival_rate = arrival_rate
@@ -183,7 +189,8 @@ class ClusterEngine:
                  seed: int = 0, churn: Optional[Sequence[ChurnJob]] = None,
                  static_union: bool = False, anticipate: bool = False,
                  surface_library=None, ckpt_bps: float = CKPT_TRANSFER_BPS,
-                 executor_factory: Optional[Callable] = None):
+                 executor_factory: Optional[Callable] = None,
+                 profile_store=None):
         self.fleet = list(fleet)
         self.controller_factory = controller_factory
         self.window_size = window
@@ -196,11 +203,26 @@ class ClusterEngine:
         self.surface_library = surface_library
         self.ckpt_bps = ckpt_bps
         self.executor_factory = executor_factory
+        self.profile_store = profile_store
+        self.store_report: Optional[dict] = None
         self._arrival_rates = arrival_rates or {}
+        if profile_store is not None and surface_library is not None:
+            # seed the shared surface from prior runs' persisted rows so a
+            # recurring architecture in a FRESH process hits the
+            # matrix-completion fast path (staleness- and LOO-gated)
+            gen = autotune.generation()
+            self.store_report = {"loaded": [], "evicted": []}
+            for dc in sorted({spec.device.name for spec in fleet}):
+                res = profile_store.load_surfaces(
+                    surface_library, device_class=dc,
+                    autotune_generation=gen)
+                self.store_report["loaded"] += res["loaded"]
+                self.store_report["evicted"] += res["evicted"]
 
         self.stall_time = 0.0
         self.compile_stall_s = 0.0
         self.migration_stall_s = 0.0
+        self.migration_modeled_s = 0.0
         self.admissions = 0
         self.drains = 0
         self.migrations = 0
@@ -360,19 +382,38 @@ class ClusterEngine:
         return dm.best_feasible_point(surface, bs_vals, mtl_vals,
                                       alpha * job.slo_s)
 
-    def _migration_cost(self, st: _JobState, spec: DeviceSpec) -> float:
-        """Seconds a share change costs `st`: its currently running
-        instances are killed and relaunched at the new share in ONE
-        parallel round (unlike the scaler's one-at-a-time MTL climbs, a
-        share resize restarts every context at once), plus a
-        checkpoint-transfer term for TPU submesh moves — each instance's
-        params stream to the new submesh over shared DCN bandwidth, so
-        that term IS serial in bytes."""
+    def _modeled_migration_cost(self, st: _JobState,
+                                spec: DeviceSpec) -> float:
+        """Modeling-default seconds a share change costs `st`: its
+        currently running instances are killed and relaunched at the new
+        share in ONE parallel round (unlike the scaler's one-at-a-time MTL
+        climbs, a share resize restarts every context at once — the 2.3 s
+        default), plus a checkpoint-transfer term for TPU submesh moves —
+        each instance's params stream to the new submesh over shared DCN
+        bandwidth (8 GB/s default), so that term IS serial in bytes."""
         mtl = max(st.prev.mtl, 1)
         cost = self.instance_kill_s + self.instance_launch_s
         if spec.mesh_shape is not None:
             cost += st.job.profile().param_bytes * mtl / self.ckpt_bps
         return cost
+
+    def _calibration_key(self, st: _JobState, spec: DeviceSpec) -> str:
+        return f"{st.job.dnn}/{st.job.dataset}|{spec.device.name}"
+
+    def _migration_cost(self, st: _JobState, spec: DeviceSpec) -> float:
+        """Stall seconds charged for one share change of `st`: the profile
+        store's calibrated percentile when enough instrumented
+        kill+relaunch measurements exist for this (architecture, device
+        class) — real executors only; a simulated executor has nothing the
+        measurements describe — else the modeling defaults."""
+        modeled = self._modeled_migration_cost(st, spec)
+        if (self.profile_store is not None
+                and hasattr(st.executor, "cache_stats")):
+            cal = self.profile_store.migration_cost(
+                self._calibration_key(st, spec))
+            if cal is not None:
+                return cal
+        return modeled
 
     def _disruption_items(self, d: int) -> float:
         """Requests the residents of d would forgo while paying the
@@ -451,10 +492,31 @@ class ClusterEngine:
         let the controller re-seed its search."""
         st = self.states[j]
         spec = self.fleet[d]
+        # cost resolves BEFORE this round's own measurement lands in the
+        # store: calibration always reflects prior rounds only
         cost = self._migration_cost(st, spec)
+        modeled = self._modeled_migration_cost(st, spec)
         self._rebuilds += 1
-        st.executor = self._make_executor(st.job, d, k,
-                                          self.seed + 3000 + self._rebuilds)
+        seed = self.seed + 3000 + self._rebuilds
+        if hasattr(st.executor, "cache_stats"):
+            # real executor: instrument the actual kill + relaunch +
+            # recompile round and feed the migration calibration
+            kill_s = (st.executor.shutdown()
+                      if hasattr(st.executor, "shutdown") else 0.0)
+            t0 = time.perf_counter()
+            st.executor = self._make_executor(st.job, d, k, seed)
+            build_s = time.perf_counter() - t0
+            warm_s = (st.executor.warmup(st.prev.bs, st.prev.mtl)
+                      if hasattr(st.executor, "warmup") else 0.0)
+            measured = kill_s + build_s + warm_s
+            st.measured_migration_s += measured
+            if self.profile_store is not None:
+                self.profile_store.record_migration(
+                    self._calibration_key(st, spec), measured)
+        else:
+            st.executor = self._make_executor(st.job, d, k, seed)
+        st.migration_modeled_s += modeled
+        self.migration_modeled_s += modeled
         st.clock += cost
         st.epoch += 1
         st.stall_time += cost
@@ -687,6 +749,10 @@ class ClusterEngine:
         st.drained_at = st.clock
         st.epoch += 1
         d = self.placement[i]
+        # the departing tenancy's probed surface row is history worth
+        # keeping — persist it NOW, before the freed share triggers
+        # reshare migrations that reset co-residents' rows
+        self._persist_job_surface(i, d)
         if i in self.residents[d]:
             self.residents[d].remove(i)
         self.drains += 1
@@ -696,6 +762,36 @@ class ClusterEngine:
             self._reshare(d, at=st.clock, optional=True)
             self._rebalance(st.clock)
         return True
+
+    # -- cross-run persistence ----------------------------------------------
+    def _persist_job_surface(self, i: int, d: int) -> bool:
+        """Persist state i's shared-surface row to the profile store under
+        its (architecture-signature, device-class) key."""
+        if self.profile_store is None or self.surface_library is None:
+            return False
+        st = self.states[i]
+        key = getattr(st.controller, "surface_key", None)
+        if key is None:
+            return False
+        # only wall-clock latencies depend on the tuned tiles; simulated
+        # rows are exempt from the generation staleness gate on reload
+        return self.profile_store.persist_surface(
+            self.surface_library, key,
+            signature=f"{st.job.dnn}/{st.job.dataset}",
+            device_class=self.fleet[d].device.name,
+            autotune_generation=autotune.generation(),
+            tile_dependent=hasattr(st.executor, "cache_stats"))
+
+    def _persist_profiles(self) -> None:
+        """End of run: every still-resident tenancy's surface row joins the
+        store (drained ones were persisted at drain time), then one atomic
+        save writes surfaces + migration calibrations together."""
+        if self.profile_store is None:
+            return
+        for i, (st, d) in enumerate(zip(self.states, self.placement)):
+            if st.active:
+                self._persist_job_surface(i, d)
+        self.profile_store.save()
 
     # -- one serving step for one job ---------------------------------------
     def _step(self, st: _JobState) -> None:
@@ -783,6 +879,7 @@ class ClusterEngine:
                 continue
             heapq.heappush(heap, (st.clock, i, st.epoch))
         self._heap = None
+        self._persist_profiles()
         return self.report()
 
     def report(self) -> dict:
@@ -818,6 +915,7 @@ class ClusterEngine:
                                if st.drained_at is not None else None),
                 "migrations": int(st.migrations),
                 "migration_stall_s": float(st.migration_stall_s),
+                "migration_modeled_s": float(st.migration_modeled_s),
                 "submitted": (st.oq.submitted if st.oq is not None
                               else st.submitted),
                 "completed": st.completed,
@@ -842,6 +940,7 @@ class ClusterEngine:
                 "total_stall_s": float(self.stall_time),
                 "compile_stall_s": float(self.compile_stall_s),
                 "migration_stall_s": float(self.migration_stall_s),
+                "migration_modeled_stall_s": float(self.migration_modeled_s),
                 "admissions": int(self.admissions),
                 "drains": int(self.drains),
                 "migrations": int(self.migrations),
@@ -929,7 +1028,8 @@ def run_churn_cluster(policy: str = "surface", *,
                       fleet: Optional[Sequence[DeviceSpec]] = None,
                       n_devices: int = 5, horizon_s: float = 150.0,
                       mode: str = "hybrid", seed: int = 0,
-                      trace_kwargs: Optional[dict] = None) -> dict:
+                      trace_kwargs: Optional[dict] = None,
+                      profile_store=None) -> dict:
     """The churn scenario under one placement policy.
 
     policy: "union"   — static placement over the union of every tenancy
@@ -938,7 +1038,11 @@ def run_churn_cluster(policy: str = "surface", *,
                         re-placement anticipating the analytic steady state;
             "surface" — dynamic plus the cross-job SurfaceLibrary (probed
                         points pooled across jobs; new admissions seed from
-                        the soft-impute completion)."""
+                        the soft-impute completion).
+
+    `profile_store` (surface policy) reloads prior runs' persisted surface
+    rows at construction and persists this run's rows at the end — the
+    cross-run warm start."""
     if policy not in CHURN_POLICIES:
         raise ValueError(f"unknown churn policy {policy!r}")
     from repro.core.matrix_completion import SurfaceLibrary
@@ -953,8 +1057,14 @@ def run_churn_cluster(policy: str = "surface", *,
         controller_factory=paper_controller_factory(mode, surface=lib),
         static_union=(policy == "union"),
         anticipate=(policy != "union"),
-        surface_library=lib, seed=seed)
+        surface_library=lib, seed=seed,
+        profile_store=(profile_store if policy == "surface" else None))
     rep = eng.run(sim_time_limit=horizon_s)
     rep["aggregate"]["policy"] = policy
     rep["aggregate"]["mode"] = mode
+    if eng.store_report is not None:
+        rep["aggregate"]["store_rows_loaded"] = len(
+            eng.store_report["loaded"])
+        rep["aggregate"]["store_rows_evicted"] = len(
+            eng.store_report["evicted"])
     return rep

@@ -30,6 +30,7 @@ from typing import Callable, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.perf import autotune
 from repro.serving import device_model as dm
 from repro.serving import tenancy
 from repro.serving.metrics import ExecCacheStats
@@ -145,7 +146,8 @@ class RealExecutor:
                  act_bytes_per_item: Optional[float] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  donate_batch: bool = False,
-                 aot: bool = True):
+                 aot: bool = True,
+                 tile_generation: Optional[Callable[[], int]] = None):
         self.fn = fn
         self.params = params
         self.make_batch = make_batch
@@ -163,7 +165,11 @@ class RealExecutor:
             self._jfn = fn               # already jitted: AOT-lower directly
         else:
             self._jfn = jax.jit(fn)
-        self._exec: dict = {}            # bucket items -> (executable, batch)
+        # bucket items -> (executable, batch, tuned-tile generation); a
+        # generation bump (new tuning persisted) makes resident entries
+        # stale — they are evicted and recompiled, never served
+        self._exec: dict = {}
+        self._tile_generation = tile_generation or autotune.generation
         self._param_bytes: Optional[float] = None
         self.cache_stats = ExecCacheStats()
         self._pending_compile = 0.0      # compile seconds not yet charged
@@ -210,8 +216,12 @@ class RealExecutor:
     def _get(self, n_bucket: int):
         entry = self._exec.get(n_bucket)
         if entry is not None:
-            self.cache_stats.hits += 1
-            return entry
+            if entry[2] == int(self._tile_generation()):
+                self.cache_stats.hits += 1
+                return entry
+            # compiled under superseded tile sizes: evict, never serve
+            del self._exec[n_bucket]
+            self.cache_stats.stale_evictions += 1
         self.cache_stats.misses += 1
         t0 = time.perf_counter()
         batch = self.make_batch(n_bucket)
@@ -228,16 +238,40 @@ class RealExecutor:
         dt = time.perf_counter() - t0
         self.cache_stats.compile_time_s += dt
         self._pending_compile += dt
-        entry = (executable, batch)
+        # tagged with the generation read AFTER compiling — those are the
+        # tiles the compile's kernel lookups actually consulted (a
+        # tune_on_miss search triggered DURING the compile bumps the
+        # generation, and this executable already uses its result)
+        entry = (executable, batch, int(self._tile_generation()))
         self._exec[n_bucket] = entry
         return entry
+
+    # -- migration instrumentation -------------------------------------------
+    def shutdown(self) -> float:
+        """Tear down the resident executables (the 'kill' half of a
+        migration's kill+relaunch round) and return the seconds it took.
+        The measurement feeds the profile store's migration calibration."""
+        t0 = time.perf_counter()
+        self._exec.clear()
+        self._pending_compile = 0.0
+        return time.perf_counter() - t0
+
+    def warmup(self, bs: int, mtl: int) -> float:
+        """Compile the bucket executable for (bs, mtl) ahead of serving and
+        return the compile seconds (0.0 on a cache hit).  The pending
+        compile charge is consumed here so the caller charging this as a
+        migration/relaunch stall does not double-charge the next step."""
+        self._get(self.bucket(bs * mtl))
+        dt = self._pending_compile
+        self._pending_compile = 0.0
+        return dt
 
     def _staged_batch(self, batch):
         return jax.device_put(batch) if self.donate_batch else batch
 
     # -- pricing ------------------------------------------------------------
     def mean_latency(self, bs: int, mtl: int, iters: int = 3) -> float:
-        executable, batch = self._get(self.bucket(bs * mtl))
+        executable, batch, _ = self._get(self.bucket(bs * mtl))
         staged = [self._staged_batch(batch) for _ in range(iters)]
         t0 = time.perf_counter()
         for b in staged:
@@ -248,7 +282,7 @@ class RealExecutor:
     # -- execution ----------------------------------------------------------
     def run_step(self, bs: int, mtl: int) -> dict:
         nb = self.bucket(bs * mtl)
-        executable, batch = self._get(nb)
+        executable, batch, gen = self._get(nb)
         comp = self._pending_compile
         self._pending_compile = 0.0
         staged = self._staged_batch(batch)
@@ -256,6 +290,13 @@ class RealExecutor:
         out = executable(self.params, staged)
         jax.block_until_ready(out)
         lat = time.perf_counter() - t0
+        if gen != int(self._tile_generation()):
+            # a tuning landed between the cache lookup and this serve:
+            # the step above ran on superseded tiles.  Count it (the
+            # invariant steady-state serving asserts is ZERO) and evict
+            # so the next step recompiles under the new generation.
+            self.cache_stats.stale_hits += 1
+            self._exec.pop(nb, None)
         self.clock += lat + comp
         items = bs * mtl                 # bucket padding rows do not count
         return {

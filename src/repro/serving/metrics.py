@@ -76,11 +76,20 @@ class ExecCacheStats:
 
     ``reset_counters`` is the warmup boundary: steady-state serving must
     show ``misses == 0`` afterwards (every scaler probe reuses a compiled
-    executable)."""
+    executable).
+
+    Executables are keyed by (batch bucket, tuned-tile generation): when
+    the autotune generation bumps, resident executables are STALE —
+    ``stale_evictions`` counts the ones dropped and recompiled, and
+    ``stale_hits`` counts any served anyway.  ``stale_hits`` must stay 0:
+    serving an executable compiled under superseded tile sizes silently
+    undoes the tuning."""
 
     hits: int = 0
     misses: int = 0
     compile_time_s: float = 0.0
+    stale_hits: int = 0
+    stale_evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -90,11 +99,14 @@ class ExecCacheStats:
     def reset_counters(self) -> None:
         self.hits = self.misses = 0
         self.compile_time_s = 0.0
+        self.stale_hits = self.stale_evictions = 0
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "hit_rate": self.hit_rate,
-                "compile_time_s": self.compile_time_s}
+                "compile_time_s": self.compile_time_s,
+                "stale_hits": self.stale_hits,
+                "stale_evictions": self.stale_evictions}
 
 
 class RunAccumulator:

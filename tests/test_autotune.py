@@ -53,9 +53,15 @@ def test_cache_round_trip_no_retiming(tuner):
     e3 = tuner.tune(kernel, "float32", iters=2, **dims)
     assert e3["config"] == e1["config"]
     assert tuner.cache_stats()["timings"] == n_timed      # still no re-timing
+    # entries live in the schema-versioned profile store, and the tuning
+    # bumped the tuned-tile generation exactly once
     with open(tuner.cache_path()) as f:
         disk = json.load(f)
-    assert len(disk) == 1
+    from repro.perf import profile_store
+    assert disk["schema"] == profile_store.SCHEMA_VERSION
+    assert len(disk["autotune"]) == 1
+    assert disk["generations"]["autotune"] == 1
+    assert tuner.generation() == 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,266 @@
+"""Sim/real conformance: the same tiny model served through SimExecutor
+and RealExecutor under DNNScalerController must agree.
+
+The paper's Table-4 claim is that the Profiler's Batching-vs-Multi-Tenancy
+DECISION and the Scaler's steady-state knob transfer from profiling to
+serving.  Here the claim is tested end to end on the real path: a tiny
+model runs under a wall-clock RealExecutor; an analytic JobProfile is
+calibrated to the real executor's measured latencies (exactly how
+`device_model._fit_profile` calibrates against the paper's Table 5, with
+wall-clock measurements in place of the published throughputs); then the
+controller runs over BOTH executors and must pick the same approach and
+land its steady-state knob within one probe step.  The real path serves
+per-point RUNNING-MEDIAN latencies with a live-re-anchored SLO (see
+MedianRealExecutor/_AnchoredSlo) so the converged knob reflects the
+measured latency curve rather than a shared host's second-scale load
+swings.
+
+One modeled quantity is intentionally NOT asserted: the absolute MT-point
+latency.  The paper's model serializes GPU time across co-located
+instances (real GPU contexts time-share SMs), while RealExecutor emulates
+MT by stacking instance batches on one leading axis — its MT latency
+amortizes like batching.  What must (and does) transfer is the eq. (3)-(5)
+improvement ORDERING, not that point's absolute value."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import DNNScalerController
+from repro.serving import device_model as dm
+from repro.serving.engine import ServingEngine
+from repro.serving.executor import RealExecutor, SimExecutor
+
+WIDTH, DEPTH = 512, 2
+M, N = 32, 8                    # the profiler's probe points (paper: m, n)
+# both searches are confined to the calibrated batch range: above ~64 the
+# host's multithreaded BLAS makes real batching nearly free (flat
+# latency), a hardware behavior outside the paper's per-image cost model
+# — conformance is claimed where the model's premises hold
+MAX_BS = 64
+# the controllers' tail window: small enough that ONE wall-clock spike
+# (which fills the window with identical values for several steps) is
+# flushed within a decision interval — otherwise a single OS spike spans
+# two decisions and defeats the paper's §4.4 short-lived-spike filter
+WINDOW = 64
+
+
+class MedianRealExecutor:
+    """RealExecutor view that serves each (bs, mtl) point's MEDIAN
+    measured latency (measured on first visit, remembered after).
+
+    The paper's methodology: every operating point is judged on "a
+    certain number of batches", not on one sample.  On a shared CI host
+    the raw per-step noise is non-stationary (sigma drifts 0.05-0.4
+    within minutes), which would make the converged knob a property of
+    the moment's load rather than of the latency curve this test is
+    about.  Execution, compiles, and the latencies themselves stay
+    real — only the per-point aggregation is applied up front."""
+
+    def __init__(self, ex: RealExecutor, reps: int = 3, keep: int = 15,
+                 anchor: tuple = None, anchor_every: int = 10):
+        self.ex = ex
+        self.reps = reps
+        self.keep = keep
+        self.anchor = anchor          # (bs, mtl) kept fresh for the SLO
+        self.anchor_every = anchor_every
+        self._steps = 0
+        self._samples: dict = {}
+
+    def _record(self, key: tuple, lat: float) -> list:
+        samples = self._samples.setdefault(key, [])
+        samples.append(lat)
+        del samples[:-self.keep]
+        return samples
+
+    def point_median(self, bs: int, mtl: int) -> float:
+        return float(np.median(self._samples[(bs, mtl)]))
+
+    def run_step(self, bs: int, mtl: int) -> dict:
+        res = self.ex.run_step(bs, mtl)
+        key = (bs, mtl)
+        samples = self._record(key, res["step_time"])
+        while len(samples) < self.reps:
+            self._record(key, self.ex.run_step(bs, mtl)["step_time"])
+        # RUNNING median: a point first visited during a load burst heals
+        # on revisit instead of staying poisoned for the whole search
+        med = self.point_median(bs, mtl)
+        self._steps += 1
+        if (self.anchor is not None and key != self.anchor
+                and self._steps % self.anchor_every == 0):
+            # interleaved anchor probe: the SLO's reference point stays
+            # measured under the SAME load the serving steps see
+            self._record(self.anchor,
+                         self.ex.run_step(*self.anchor)["step_time"])
+        items = bs * mtl
+        res.update(step_time=med,
+                   request_latencies=np.full(min(items, 64), med),
+                   throughput=items / med)
+        return res
+
+
+def make_real_executor() -> RealExecutor:
+    ks = jax.random.split(jax.random.PRNGKey(0), DEPTH)
+    params = [jax.random.normal(k, (WIDTH, WIDTH)) * 0.05 for k in ks]
+
+    def fn(params, batch):
+        x = batch["x"]
+        for w in params:
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    def make_batch(n):
+        return {"x": jnp.ones((n, WIDTH), jnp.float32)}
+
+    # unit buckets: the conformance claim is about the latency CURVE, so
+    # the real path must not quantize it through the serving bucket ladder
+    return RealExecutor(fn, params, make_batch,
+                        buckets=tuple(range(1, 129)))
+
+
+def _measure(ex: RealExecutor, bs: int, mtl: int) -> float:
+    """Median of repeated mean-latency measurements (seconds) — one OS
+    spike must not skew the calibration."""
+    return float(np.median([ex.mean_latency(bs, mtl, iters=3)
+                            for _ in range(5)]))
+
+
+def fit_profile(lat1_s: float, lat_m_s: float, lat_hi_s: float,
+                hi: int) -> dm.JobProfile:
+    """Calibrate (host, gpu1, amort) to measured batch latencies at
+    bs in {1, M, hi} — the grid fit of `_fit_profile` driven by wall-clock
+    measurements.  Fitting the top of the batch range matters: that is
+    where the Batching scaler's steady state lives."""
+    base_ms = lat1_s * 1e3
+    host = base_ms * np.linspace(0.05, 0.95, 46)[:, None]     # (46, 1)
+    gpu1 = base_ms - host
+    amort = np.linspace(0.0, 0.95, 39)[None, :]               # (1, 39)
+    lat_m = M * (host * float(dm.rho(M)) + gpu1 * M ** (-amort)) / 1e3
+    lat_hi = hi * (host * float(dm.rho(hi)) + gpu1 * hi ** (-amort)) / 1e3
+    err = (np.log(lat_m / lat_m_s) ** 2 + np.log(lat_hi / lat_hi_s) ** 2)
+    i, j = np.unravel_index(np.argmin(err), err.shape)
+    return dm.JobProfile(name="conformance-mlp", host_ms=float(host[i, 0]),
+                         gpu1_ms=float(gpu1[i, 0]),
+                         amort=float(amort[0, j]),
+                         flops=DEPTH * WIDTH * WIDTH * 2.0,
+                         param_bytes=DEPTH * WIDTH * WIDTH * 4.0)
+
+
+ANCHOR_BS = 48      # the SLO sits at the top of the band over lat(48):
+#                     steady state lands mid-range of the calibrated curve
+
+
+class _AnchoredSlo:
+    """SLO = lat(48)/0.9 from the serving-path's OWN running-median pool,
+    re-anchored live (25% hysteresis) as the host's load drifts.
+
+    Each path anchors its SLO to its own measured lat(48) (the sim to the
+    model's).  A shared absolute SLO would make the steady knob a
+    function of host-load DRIFT between calibration and serving — on a
+    contended host the whole curve breathes 1.5x over seconds — while the
+    Table-4 claim under test is about the latency curve's SHAPE.  The
+    hysteresis keeps re-anchors rare (every change resets the scaler's
+    search, exactly as a real capacity change would)."""
+
+    def __init__(self, served: MedianRealExecutor):
+        self.served = served
+        for _ in range(3):
+            served.run_step(ANCHOR_BS, 1)
+        self.slo = served.point_median(ANCHOR_BS, 1) / 0.9
+
+    def __call__(self, t: float) -> float:
+        fresh = self.served.point_median(ANCHOR_BS, 1) / 0.9
+        if abs(fresh - self.slo) > 0.25 * self.slo:
+            self.slo = fresh
+        return self.slo
+
+
+def _anchored_slo_sim(prof: dm.JobProfile) -> float:
+    return dm.batch_latency(dm.TESLA_P40, prof, ANCHOR_BS) / 0.9
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    """(real executor, fitted profile, calibration-time measurements)
+    shared by the suite — the measurements are the expensive part."""
+    ex = make_real_executor()
+    measured = {bs: _measure(ex, bs, 1) for bs in (1, M, 48, MAX_BS, 128)}
+    prof = fit_profile(measured[1], measured[M], measured[128], hi=128)
+    return ex, prof, measured
+
+
+def test_fitted_profile_reproduces_batch_curve(calibrated):
+    """The fit's residual against the CALIBRATION-TIME measurements
+    (including bs=48/64, which the fit never saw) must be small enough
+    that both searches walk the same terrain.  Judged against the
+    measurements the fit was built from — re-measuring minutes later
+    would test the shared host's load stationarity, not the model.
+
+    The strict bound covers the range the searches actually visit
+    (<= MAX_BS); at bs=128 the model's per-image host term with its
+    rho(bs) copy-pressure factor structurally overestimates this
+    workload's flat real curve (multithreaded BLAS), so that anchor only
+    gets a sanity bound."""
+    _, prof, measured = calibrated
+    for bs, lat in measured.items():
+        model = dm.batch_latency(dm.TESLA_P40, prof, bs)
+        if bs <= MAX_BS:
+            assert model == pytest.approx(lat, rel=0.5), bs
+        else:
+            assert model == pytest.approx(lat, rel=2.0), bs
+
+
+def test_profiler_decision_agrees_sim_vs_real(calibrated):
+    """The paper's eq. (3)-(5) decision must not depend on which executor
+    (analytic or wall-clock) ran the probes."""
+    ex, prof, _ = calibrated
+    served = MedianRealExecutor(ex)
+    real = DNNScalerController(served, _AnchoredSlo(served).slo,
+                               mode="auto", m=M, n=N, max_bs=MAX_BS)
+    sim = DNNScalerController(SimExecutor(prof, seed=0),
+                              _anchored_slo_sim(prof),
+                              mode="auto", m=M, n=N, max_bs=MAX_BS)
+    assert real.profile.approach == sim.profile.approach
+    # and the improvement ORDERING agrees, not just the argmax
+    assert ((real.profile.ti_b > real.profile.ti_mt)
+            == (sim.profile.ti_b > sim.profile.ti_mt))
+
+
+def _steady(engine: ServingEngine, ctrl, steps: int) -> tuple:
+    acc = engine.run(ctrl, max_steps=steps)
+    last = [(bs, mtl) for _, bs, mtl, *_ in acc.trace[-steps // 3:]]
+    vals, counts = np.unique(np.array(last), axis=0, return_counts=True)
+    return tuple(int(v) for v in vals[int(np.argmax(counts))])
+
+
+def test_steady_state_knobs_within_one_probe_step(calibrated):
+    """Serve the same workload to steady state on both executors: the
+    dominant knob must land within ONE probe step — a binary-search
+    midpoint move, i.e. a factor of two, plus a small allowance for the
+    real path's measurement granularity — and the tenancy knob within
+    +-1."""
+    ex, prof, _ = calibrated
+    served = MedianRealExecutor(ex, anchor=(ANCHOR_BS, 1))
+    anchored = _AnchoredSlo(served)
+    real_ctrl = DNNScalerController(served, anchored.slo, mode="auto",
+                                    m=M, n=N, max_bs=MAX_BS)
+    real_steady = _steady(
+        ServingEngine(served, anchored.slo, instance_launch_s=0.01,
+                      window=WINDOW, slo_schedule=anchored),
+        real_ctrl, steps=400)
+    slo_s_ = _anchored_slo_sim(prof)
+    sim_ctrl = DNNScalerController(SimExecutor(prof, seed=0), slo_s_,
+                                   mode="auto", m=M, n=N, max_bs=MAX_BS)
+    sim_steady = _steady(
+        ServingEngine(SimExecutor(prof, seed=1), slo_s_, window=WINDOW),
+        sim_ctrl, steps=400)
+
+    assert real_ctrl.profile.approach == sim_ctrl.profile.approach
+    bs_r, mtl_r = real_steady
+    bs_s, mtl_s = sim_steady
+    assert abs(math.log2(max(bs_s, 1) / max(bs_r, 1))) <= 1.2, \
+        (real_steady, sim_steady)
+    assert abs(mtl_s - mtl_r) <= 1, (real_steady, sim_steady)
