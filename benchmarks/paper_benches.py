@@ -274,6 +274,53 @@ def bench_churn():
     return rows
 
 
+def bench_partition():
+    """Beyond-paper: spatial partition sharing (the third knob).  The
+    mixed small/large-DNN churn trace served under {uniform 1/k
+    time-share baseline, heterogeneous MPS shares, MIG-grid shares} —
+    all three priced by the SAME calibrated spatial model, so the rows
+    isolate what heterogeneous shares + cheap resizes buy.  Also pins the
+    pricing calibration itself: uniform partitions must reproduce the
+    MTL curves bit-identically."""
+    import numpy as _np
+    from repro.serving.cluster import (PARTITION_POLICIES,
+                                       run_partition_cluster)
+    from repro.serving.workload import mixed_partition_trace
+
+    rows = []
+    # calibration row: uniform 1/m spatial shares == the paper's MTL curve
+    prof = dm.paper_profile("inception_v1")
+    bs = _np.array([1, 2, 4, 8, 16, 32, 64, 128])
+    ident = all(
+        _np.array_equal(
+            dm.part_latency_grid(DEV, prof, bs, [1],
+                                 inv_share=float(m), tenants=m),
+            dm.mt_latency_grid(DEV, prof, bs, [m]))
+        for m in range(1, 11))
+    rows.append(("partition/uniform_equals_mtl_pricing", 0.0,
+                 f"bit_identical={ident}"))
+
+    horizon, seed = 120.0, 1
+    trace = mixed_partition_trace(horizon_s=horizon, n_light=5, seed=seed)
+    goodput = {}
+    for policy in PARTITION_POLICIES:
+        rep = run_partition_cluster(policy, trace=list(trace), n_devices=2,
+                                    horizon_s=horizon, seed=seed)
+        a = rep["aggregate"]
+        goodput[policy] = a["goodput"]
+        rows.append((f"partition/{policy}", 0.0,
+                     f"goodput={a['goodput']:.1f}/s,"
+                     f"thr={a['aggregate_throughput']:.1f}/s,"
+                     f"resizes={a['resizes']},"
+                     f"resize_stall={a['resize_stall_s']:.2f}s,"
+                     f"migs={a['migrations']},"
+                     f"mig_stall={a['migration_stall_s']:.1f}s,"
+                     f"conserved={'yes' if a['conserved'] else 'NO'}"))
+    rows.append(("partition/het_vs_uniform", 0.0,
+                 f"x{goodput['het'] / max(goodput['uniform'], 1e-9):.2f}"))
+    return rows
+
+
 def bench_burst():
     """Beyond-paper: open-loop bursty arrivals (paper §3.2 mentions bursty
     workloads) — DNNScaler vs static bs=1 under a 3x burst."""

@@ -29,6 +29,7 @@ Suites (one per paper table/figure — DESIGN.md §8):
   llm           DNNScaler on the assigned architectures (TPU model)
   cluster       multi-job cluster serving: paper vs hybrid vs pure knobs
   churn         online admit/drain churn: union vs dynamic vs shared surface
+  partition     spatial partition sharing: uniform vs heterogeneous shares
   burst         open-loop bursty arrivals: DNNScaler vs static (beyond paper)
   alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
   matcomp       ablation: matrix completion vs naive interpolation
@@ -62,6 +63,7 @@ def suites():
         "llm": paper_benches.bench_llm_serving,
         "cluster": paper_benches.bench_cluster,
         "churn": paper_benches.bench_churn,
+        "partition": paper_benches.bench_partition,
         "burst": paper_benches.bench_burst,
         "alpha": paper_benches.bench_alpha_ablation,
         "matcomp": paper_benches.bench_matrix_completion_ablation,

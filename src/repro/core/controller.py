@@ -37,11 +37,14 @@ class DNNScalerController:
                  max_bs: int = 128, max_mtl: int = 10,
                  m: int = 32, n: int = 8, decision_interval: int = 5,
                  mode: str = "auto", surface_library=None,
-                 surface_key=None):
+                 surface_key=None, share_ladder=None):
         if mode not in ("auto", "hybrid", "B", "MT"):
             raise ValueError(f"unknown mode {mode!r}")
         self.slo = slo_s
         self.mode = mode
+        # spatial-partition third knob (serving/partition.py): only the
+        # HybridScaler searches it; the 1-D paper scalers ignore it
+        self.share_ladder = share_ladder
         self.max_bs = max_bs
         self.max_mtl = max_mtl
         self.estimator = estimator or LatencyEstimator(max_mtl=max_mtl)
@@ -74,7 +77,8 @@ class DNNScalerController:
             self.scaler = HybridScaler(slo_s, self.estimator, observed,
                                        primary=self.profile.approach,
                                        max_bs=max_bs, max_mtl=max_mtl,
-                                       decision_interval=decision_interval)
+                                       decision_interval=decision_interval,
+                                       share_ladder=share_ladder)
             self._seed_scaler_surface(executor)
         elif picked == "B":
             self.scaler = BatchScaler(slo_s, max_bs=max_bs,
@@ -95,7 +99,10 @@ class DNNScalerController:
         self._surface_margin = 1.0
         lib = self.surface_library
         if lib is not None:
-            pred = lib.predict(self.surface_key)
+            # a partitioned scaler seeds from the tensor slice at ITS rung
+            share = getattr(self.scaler, "share", None)
+            pred = (lib.predict(self.surface_key, share=share)
+                    if share is not None else lib.predict(self.surface_key))
             if pred is not None:
                 est, support = pred
                 bs_vals = np.asarray(lib.bs_values)
@@ -187,13 +194,25 @@ class DNNScalerController:
         self.probed_points.add((act.bs, act.mtl))
         return act
 
+    def note_share_grant(self, share: float) -> None:
+        """The cluster granted (possibly clipped) this job's partition
+        share — align the scaler's ladder position with reality."""
+        if hasattr(self.scaler, "set_granted_share"):
+            self.scaler.set_granted_share(share)
+
+    def note_share_cap(self, share: float) -> None:
+        """Device headroom bound for future share requests."""
+        if hasattr(self.scaler, "set_share_cap"):
+            self.scaler.set_share_cap(share)
+
     def observe(self, p95: float, result: Optional[dict] = None) -> None:
         if self.surface_library is not None and result is not None:
             st = result.get("step_time")
             if st:
                 act = self.scaler.action()   # the point this step served
                 self.surface_library.observe(self.surface_key,
-                                             act.bs, act.mtl, st)
+                                             act.bs, act.mtl, st,
+                                             share=act.share)
         self.scaler.observe(p95, result)
 
 

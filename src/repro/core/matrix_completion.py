@@ -64,9 +64,19 @@ class SurfaceLibrary:
     def __init__(self, bs_values: tuple = (1, 2, 4, 8, 16, 32, 64, 128),
                  max_mtl: int = 10, *, min_rows: int = 1,
                  min_points: int = 2, rank: int = 3, loo_tol: float = 0.3,
-                 sim_tol: float = 0.25, max_sim_rows: int = 6):
+                 sim_tol: float = 0.25, max_sim_rows: int = 6,
+                 share_values: tuple = (1.0,)):
         self.bs_values = tuple(int(b) for b in bs_values)
         self.mtl_values = tuple(range(1, max_mtl + 1))
+        # spatial-partition knob grid (serving/partition.py share ladder),
+        # stored DESCENDING so latency is monotone non-decreasing along
+        # all three axes (bs up, mtl up, share DOWN) — the monotone prior
+        # and the dominance support mask then treat every axis alike.
+        # The default single-rung grid keeps the library exactly 2-D:
+        # arrays, persistence, and predictions are bit-identical to the
+        # pre-partition library.
+        self.share_values = tuple(sorted((float(s) for s in share_values),
+                                         reverse=True))
         self.min_rows = min_rows          # similar rows needed to predict
         self.min_points = min_points      # observed points the target needs
         self.rank = rank
@@ -74,8 +84,8 @@ class SurfaceLibrary:
         self.sim_tol = sim_tol            # shared-support similarity gate
         self.max_sim_rows = max_sim_rows  # completion uses the k best rows
         self._bs_idx = {b: i for i, b in enumerate(self.bs_values)}
-        self._sum: dict = {}              # key -> (nb, nm) latency sums
-        self._cnt: dict = {}              # key -> (nb, nm) sample counts
+        self._sum: dict = {}              # key -> self.shape latency sums
+        self._cnt: dict = {}              # key -> self.shape sample counts
         self._version: dict = {}          # key -> bumped on every change
         self._pred_cache: dict = {}       # key -> (versions-fingerprint, est)
         self.observations = 0             # on-grid points recorded (total)
@@ -86,23 +96,40 @@ class SurfaceLibrary:
 
     @property
     def shape(self) -> tuple:
-        return len(self.bs_values), len(self.mtl_values)
+        if len(self.share_values) == 1:
+            return len(self.bs_values), len(self.mtl_values)
+        return (len(self.bs_values), len(self.mtl_values),
+                len(self.share_values))
 
-    def observe(self, key, bs: int, mtl: int, latency_s: float) -> None:
-        """Record one probed step latency.  Off-grid (bs, mtl) points are
-        dropped — the scalers' doubling/AIMD moves keep probes on the
-        power-of-two x small-integer grid, so coverage stays dense."""
+    def share_index(self, share) -> Optional[int]:
+        """Grid index of a share rung (None = the largest rung / off-grid
+        values are rejected, mirroring the bs grid)."""
+        if share is None:
+            return 0
+        for s, v in enumerate(self.share_values):
+            if abs(v - float(share)) <= 1e-9:
+                return s
+        return None
+
+    def observe(self, key, bs: int, mtl: int, latency_s: float,
+                share=None) -> None:
+        """Record one probed step latency.  Off-grid (bs, mtl, share)
+        points are dropped — the scalers' doubling/AIMD/ladder moves keep
+        probes on the power-of-two x small-integer x rung grid, so
+        coverage stays dense."""
         i = self._bs_idx.get(int(bs))
         j = int(mtl) - 1
-        if i is None or not 0 <= j < len(self.mtl_values):
+        s = self.share_index(share)
+        if i is None or s is None or not 0 <= j < len(self.mtl_values):
             return
         if not np.isfinite(latency_s) or latency_s <= 0.0:
             return
         if key not in self._sum:
             self._sum[key] = np.zeros(self.shape)
             self._cnt[key] = np.zeros(self.shape, dtype=np.int64)
-        self._sum[key][i, j] += float(latency_s)
-        self._cnt[key][i, j] += 1
+        ix = (i, j) if len(self.share_values) == 1 else (i, j, s)
+        self._sum[key][ix] += float(latency_s)
+        self._cnt[key][ix] += 1
         self._version[key] = self._version.get(key, 0) + 1
         self.observations += 1
 
@@ -158,13 +185,25 @@ class SurfaceLibrary:
         self.observations += int(mask.sum())
         return True
 
-    def predict(self, key) -> Optional[tuple]:
+    def _base_flat(self, mask_flat) -> Optional[int]:
+        """Flat index of the row's normalizer: the (bs=1, mtl=1) point at
+        the LARGEST observed share rung (rung 0 is the largest because the
+        share grid is stored descending; with the default single-rung grid
+        this is exactly the old (1, 1) requirement)."""
+        for s in range(len(self.share_values)):
+            if mask_flat[s]:
+                return s
+        return None
+
+    def predict(self, key, share=None) -> Optional[tuple]:
         """(completed mean-latency surface, support mask) for `key`, the
         surface de-normalized by the job's own observed (1, 1) point.
         None until the target has its (1, 1) normalizer plus `min_points`
         observations and the library holds `min_rows` similar tenancies
         (too little history would let one noisy row poison permanent
-        dominance pins downstream).
+        dominance pins downstream).  With a multi-rung share grid the
+        completed object is the full (bs, mtl, share) tensor; pass
+        `share=` to get the 2-D (bs, mtl) slice at that rung.
 
         The §3.3.2 premise is SIMILARITY, so the completion does not pool
         every tenancy: library rows are first ranked by agreement with the
@@ -180,20 +219,25 @@ class SurfaceLibrary:
         if self.n_points(key) < max(self.min_points, 1):
             return None
         mean, mask = self.row(key)
-        if not mask[0, 0]:
+        t_mask = np.ravel(mask)
+        base = self._base_flat(t_mask)
+        if base is None:
             self.last_reject = "base"
             return None                   # need the normalizer
-        t_norm = np.ravel(mean / mean[0, 0])
-        t_mask = np.ravel(mask)
+        t_norm = np.ravel(mean) / np.ravel(mean)[base]
         others = []
         for k in self._sum:
-            if k == key or self._cnt[k][0, 0] == 0 or self.n_points(k) < 2:
+            if k == key or self.n_points(k) < 2:
                 continue
             m, obs = self.row(k)
-            r_norm = np.ravel(m / m[0, 0])
             r_mask = np.ravel(obs)
+            rbase = self._base_flat(r_mask)
+            if rbase is None:
+                continue
+            r_norm = np.ravel(m) / np.ravel(m)[rbase]
             shared = np.nonzero(t_mask & r_mask)[0]
-            shared = shared[shared != 0]  # (1,1) is 1.0 by construction
+            # base points are 1.0 by construction — no information
+            shared = shared[(shared != base) & (shared != rbase)]
             if len(shared) < 2:
                 continue                  # not enough overlap to judge
             err = float(np.median(np.abs(r_norm[shared] - t_norm[shared])
@@ -212,7 +256,7 @@ class SurfaceLibrary:
         cached = self._pred_cache.get(key)
         if cached is not None and cached[0] == fingerprint:
             self.last_reject = cached[2] if len(cached) > 2 else None
-            return cached[1]
+            return self._slice_result(cached[1], share)
         # complete in LOG space: latency surfaces are near-multiplicative
         # families (host x batch x tenancy factors), so their logs are
         # genuinely low-rank — and the 3-orders-of-magnitude dynamic range
@@ -244,7 +288,7 @@ class SurfaceLibrary:
             return np.exp(coef @ basis)
 
         # leave-one-out gate on the target's off-base observations
-        holdouts = [ix for ix in np.nonzero(t_mask)[0] if ix != 0]
+        holdouts = [ix for ix in np.nonzero(t_mask)[0] if ix != base]
         for ix in holdouts:
             loo = t_mask.copy()
             loo[ix] = False
@@ -257,10 +301,11 @@ class SurfaceLibrary:
 
         est = complete(t_mask).reshape(self.shape)
         est = np.maximum(est, 1e-9)
-        # physical prior: latency is monotone in both knobs
-        est = np.maximum.accumulate(est, axis=0)
-        est = np.maximum.accumulate(est, axis=1)
-        est = est * mean[0, 0]
+        # physical prior: latency is monotone along every knob axis (the
+        # share axis is stored descending, so it points the same way)
+        for ax in range(est.ndim):
+            est = np.maximum.accumulate(est, axis=ax)
+        est = est * np.ravel(mean)[base]
         # support: a grid point is trustworthy only if SOME pooled
         # observation dominates it (component-wise >=) — latency
         # monotonicity then upper-bounds it by a measured value.  Corners
@@ -269,13 +314,25 @@ class SurfaceLibrary:
         pooled = t_mask.reshape(self.shape).copy()
         for m in lib_mask:
             pooled |= m.reshape(self.shape)
-        support = np.flip(np.flip(
-            np.maximum.accumulate(np.maximum.accumulate(
-                np.flip(np.flip(pooled, 0), 1), axis=0), axis=1), 0), 1)
+        support = pooled
+        for ax in range(support.ndim):
+            support = np.flip(np.maximum.accumulate(
+                np.flip(support, ax), axis=ax), ax)
         result = (est, support)
         self.last_reject = None
         self._pred_cache[key] = (fingerprint, result, None)
-        return result
+        return self._slice_result(result, share)
+
+    def _slice_result(self, result, share):
+        """The (bs, mtl) view of a prediction at one share rung (the full
+        object — 2-D, or the whole tensor — when `share` is None)."""
+        if result is None or share is None or len(self.share_values) == 1:
+            return result
+        s = self.share_index(share)
+        if s is None:
+            return None
+        est, support = result
+        return est[:, :, s], support[:, :, s]
 
 
 class LatencyEstimator:

@@ -208,6 +208,18 @@ class HybridScaler:
         is known) waits for two consecutive slack readings — near the band
         edge a single below-band wobble is usually noise, and the probe it
         would trigger is served at over-SLO latency;
+      * with a `share_ladder` (spatial partitioning — serving/partition.py)
+        the search gains a THIRD coordinate-descent axis over discrete
+        device-share rungs: share-up is the tertiary growth move (and the
+        violation escape at the (1, 1) floor, before `infeasible`),
+        share-down is probed under deep slack to hand capacity back to the
+        cluster.  Share moves ride the same pending/revert machinery as
+        the knob moves (throughput-guarded, so a share-up that demand
+        cannot use is reverted), pins become (bs, mtl, rung) triples, and
+        dominance extends along the new axis: latency is monotone
+        DECREASING in share, so a persistent failure at (b0, m0, s0)
+        prunes bs >= b0, mtl >= m0 at every share <= s0.  The cluster
+        mediates actual grants (`set_granted_share` / `set_share_cap`);
       * latency slack alone is NOT a go signal in 2-D: host-bound jobs lose
         throughput as BS grows even while p95 stays under the SLO (the
         rho(BS) copy-pressure term).  Every growth move is therefore
@@ -225,7 +237,7 @@ class HybridScaler:
                  amnesty: int = 20, revert_tol: float = 0.05,
                  spike_guard: float = 1.5, persist_pins: int = 2,
                  mtl_move_cost_s: float = 2.0, min_eval_samples: int = 60,
-                 safety: float = 0.0):
+                 safety: float = 0.0, share_ladder=None):
         self.slo = slo_s
         self.alpha = alpha
         self.primary = primary
@@ -244,6 +256,19 @@ class HybridScaler:
         # more than it bought compliance (measured in the cluster bench)
         self.safety = safety
         self.refine_gate = True   # require 2 slack readings in refine mode
+        # third coordinate-descent axis (spatial partitioning): a discrete
+        # ladder of device shares the scaler may request.  The CLUSTER
+        # grants shares (legality: co-resident shares sum <= 1) — the
+        # scaler requests; `set_granted_share` aligns it with the grant and
+        # `set_share_cap` bounds requests by the device's headroom.  None
+        # keeps the scaler exactly 2-D (every pin key carries a constant
+        # share index, so behavior is bit-identical to the 2-D search).
+        self.share_ladder = (tuple(sorted(float(s) for s in share_ladder))
+                             if share_ladder else None)
+        self._share_idx = (len(self.share_ladder) - 1
+                           if self.share_ladder else 0)
+        self._share_value = None       # off-ladder grant currently held
+        self._share_cap_idx = self._share_idx
         self.bs = 1
         self.estimate = None
         if primary == "MT" and estimator is not None and observed:
@@ -288,7 +313,42 @@ class HybridScaler:
         self.converged_steps = 0
 
     def action(self) -> Action:
-        return Action(bs=self.bs, mtl=self.mtl)
+        return Action(bs=self.bs, mtl=self.mtl, share=self.share)
+
+    # -- third axis: partition share ----------------------------------------
+    @property
+    def share(self):
+        if self.share_ladder is None:
+            return None
+        if self._share_value is not None:
+            return self._share_value    # holding an off-ladder grant
+        return self.share_ladder[self._share_idx]
+
+    def _rung_at_most(self, share: float) -> int:
+        idx = 0
+        for i, r in enumerate(self.share_ladder):
+            if r <= share + 1e-9:
+                idx = i
+        return idx
+
+    def set_granted_share(self, share: float) -> None:
+        """Align with the cluster's actual grant (it may clip a request to
+        the device's headroom, shrink the slice at an admission, or grant
+        an off-ladder value like 1/3).  The scaler KEEPS reporting the
+        granted value until it deliberately moves — snapping the report
+        down to a rung would make the engine read the difference as a
+        shrink request and charge a spurious resize one step later."""
+        if self.share_ladder is None:
+            return
+        self._share_idx = self._rung_at_most(share)
+        self._share_value = (None if abs(
+            share - self.share_ladder[self._share_idx]) <= 1e-9 else share)
+
+    def set_share_cap(self, share: float) -> None:
+        """Bound future share requests by the device's current headroom."""
+        if self.share_ladder is None:
+            return
+        self._share_cap_idx = self._rung_at_most(share)
 
     # -- surface seeding ----------------------------------------------------
     def seed_surface(self, bs_values, mtl_values, latency_s,
@@ -321,7 +381,8 @@ class HybridScaler:
                 continue
             i = int(rows[0])             # latency is monotone in bs: the
             if i < prev_first:           # first bad bs rules the column out
-                self._dom_counts[(bs_values[i], m)] = self.persist_pins
+                self._dom_counts[(bs_values[i], m, self._share_idx)] = \
+                    self.persist_pins
                 pins += 1
                 prev_first = i
         # BS ceiling at the MTL we are sitting on (conservative for lower
@@ -332,29 +393,38 @@ class HybridScaler:
                 self._hi = min(self._hi, max(bs_values[int(rows[0])] - 1, 1))
         return pins
 
-    # -- known-bad (2-D, amnesty-windowed) ----------------------------------
-    def is_pinned(self, bs: int, mtl: int) -> bool:
-        # probe-target pins prune by dominance: latency is monotone in both
-        # knobs, so a probe that persistently failed at (b0, m0) rules out
-        # every point in its upper-right quadrant.  Occupancy pins (the
-        # point we were sitting on when load or noise shifted) and fresh
-        # pins block the exact point only — a transient at the steady
-        # point must not condemn the whole search space above it.
-        for (b0, m0), c in self._dom_counts.items():
-            if c >= self.persist_pins and b0 <= bs and m0 <= mtl:
+    # -- known-bad (3-D, amnesty-windowed) ----------------------------------
+    def is_pinned(self, bs: int, mtl: int, si: int = None) -> bool:
+        # probe-target pins prune by dominance: latency is monotone
+        # increasing in bs and mtl and DECREASING in share, so a probe that
+        # persistently failed at (b0, m0, s0) rules out every point with
+        # bs >= b0, mtl >= m0 at the same or any SMALLER share.  Occupancy
+        # pins (the point we were sitting on when load or noise shifted)
+        # and fresh pins block the exact point only — a transient at the
+        # steady point must not condemn the whole search space above it.
+        # With no share ladder every key carries index 0 and this reduces
+        # to the original 2-D dominance exactly.
+        if si is None:
+            si = self._share_idx
+        for (b0, m0, s0), c in self._dom_counts.items():
+            if c >= self.persist_pins and b0 <= bs and m0 <= mtl \
+                    and si <= s0:
                 return True
         # occupancy pins (generic shrinks at a held point) deliberately
         # never become permanent: over a long run, noise alone would strike
         # every good point twice eventually and ratchet the search into a
         # corner — only deliberate, post-cooldown probe verdicts persist
-        t = self._known_bad.get((bs, mtl))
+        t = self._known_bad.get((bs, mtl, si))
         return t is not None and self._decisions - t < self.amnesty
 
-    def _pin(self, bs: int, mtl: int, dominant: bool = False) -> None:
-        self._known_bad[(bs, mtl)] = self._decisions
+    def _pin(self, bs: int, mtl: int, dominant: bool = False,
+             si: int = None) -> None:
+        if si is None:
+            si = self._share_idx
+        self._known_bad[(bs, mtl, si)] = self._decisions
         if dominant:
-            self._dom_counts[(bs, mtl)] = \
-                self._dom_counts.get((bs, mtl), 0) + 1
+            self._dom_counts[(bs, mtl, si)] = \
+                self._dom_counts.get((bs, mtl, si), 0) + 1
 
     def _mark_move(self) -> None:
         """A knob just changed: the tail window was reset, so its p95 is
@@ -400,24 +470,64 @@ class HybridScaler:
         self._mark_move()
         return True
 
+    def _grow_share(self) -> bool:
+        """Request the next share rung up (more spatial capacity).  Tried
+        when both knob axes are saturated, and as the violation escape at
+        the (1, 1) floor — a bigger slice is the only remaining move."""
+        if self.share_ladder is None:
+            return False
+        nxt = self._share_idx + 1
+        if nxt > min(self._share_cap_idx, len(self.share_ladder) - 1):
+            return False
+        if self.is_pinned(self.bs, self.mtl, nxt):
+            return False
+        if (self._share_value is not None
+                and self.share_ladder[nxt] <= self._share_value + 1e-9):
+            return False                 # the rung up is not actually more
+        self._share_idx = nxt
+        self._share_value = None
+        self._mark_move()
+        return True
+
+    def _shrink_share(self) -> bool:
+        """Probe one share rung down: frees cluster capacity.  Only worth
+        trying under deep slack; the throughput guard reverts it when the
+        smaller slice actually cost served items (closed loop), and keeps
+        it when demand was the binding constraint anyway (open loop)."""
+        if self.share_ladder is None or self._share_idx == 0:
+            return False
+        if self.is_pinned(self.bs, self.mtl, self._share_idx - 1):
+            return False
+        self._share_idx -= 1
+        self._share_value = None
+        self._mark_move()
+        return True
+
     def _grow(self, allow_secondary: bool) -> bool:
         if self.primary == "MT":
-            return self._grow_mtl() or (allow_secondary and self._grow_bs())
-        return self._grow_bs() or (allow_secondary and
-                                   self._grow_mtl(secondary=True))
+            return (self._grow_mtl()
+                    or (allow_secondary and self._grow_bs())
+                    or (allow_secondary and self._grow_share()))
+        return (self._grow_bs()
+                or (allow_secondary and self._grow_mtl(secondary=True))
+                or (allow_secondary and self._grow_share()))
 
     def _shrink(self) -> None:
         """Back off after a persistent/gross violation."""
         self.converged_steps = 0
         if self._pending is not None:
-            # the violation is the direct result of the last move: undo it
-            # (and the pin is a probe-target pin — dominance applies)
-            self._pin(self.bs, self.mtl, dominant=True)
-            (pbs, pmtl), _ = self._pending
+            # the violation is the direct result of the last move: undo it.
+            # Dominance applies to bs/mtl/share-down probes (monotone
+            # directions); a share-UP probe that 'violated' can only be
+            # noise — latency shrinks with share — so pin the exact point
+            (pbs, pmtl, psi, pval), _ = self._pending
+            self._pin(self.bs, self.mtl,
+                      dominant=self._share_idx <= psi)
             self._pending = None
             if self.mtl == pmtl and self.bs > pbs:
                 self._hi = self.bs
             self.bs, self.mtl = pbs, pmtl
+            self._share_idx, self._share_value = psi, pval
             self._mark_move()
             return
         self._pin(self.bs, self.mtl)
@@ -438,6 +548,10 @@ class HybridScaler:
             # ceiling there is >= the one learned here); the amnesty
             # relaxation re-opens it gradually if there is room
             self._mark_move()
+        elif self._grow_share():
+            # (1, 1) still violates: a bigger spatial slice is the one
+            # remaining escape before declaring the job infeasible
+            return
         else:
             self.infeasible = True
 
@@ -478,15 +592,27 @@ class HybridScaler:
             return
 
         if self._pending is not None and p95 <= slo_t:
-            (pbs, pmtl), pthr = self._pending
+            (pbs, pmtl, psi, pval), pthr = self._pending
             self._pending = None
-            if (thr is not None and pthr is not None
-                    and thr < pthr * (1.0 - self.revert_tol)):
-                # latency-feasible but throughput-negative: revert + pin
-                self._pin(self.bs, self.mtl, dominant=True)
+            revert = False
+            if thr is not None and pthr is not None:
+                revert = thr < pthr * (1.0 - self.revert_tol)
+                if self._share_idx > psi and not revert:
+                    # a share-UP consumes a cluster-wide resource: it must
+                    # STRICTLY pay for itself.  A demand-capped job whose
+                    # throughput stayed flat hands the slice back.
+                    revert = thr <= pthr * (1.0 + self.revert_tol)
+            if revert:
+                # latency-feasible but throughput-negative: revert + pin.
+                # A share-UP probe that bought nothing (demand was the
+                # binding constraint) gets an exact-point pin only —
+                # dominance along the share axis points the other way
+                self._pin(self.bs, self.mtl,
+                          dominant=self._share_idx <= psi)
                 if self.mtl == pmtl and self.bs > pbs:
                     self._hi = self.bs    # larger BS is worse here: cap it
                 self.bs, self.mtl = pbs, pmtl
+                self._share_idx, self._share_value = psi, pval
                 self._mark_move()
                 self.converged_steps = 0
                 return
@@ -517,9 +643,17 @@ class HybridScaler:
             # yet) the primary axis moves on the first reading.
             gate = (2 if self.refine_gate and self._hi < self.hard_max_bs
                     else 1)
-            prev = (self.bs, self.mtl)
+            prev = (self.bs, self.mtl, self._share_idx, self._share_value)
             if (self._slack_streak >= gate
                     and self._grow(allow_secondary=self._slack_streak >= 2)):
+                self._pending = (prev, thr)
+                self.converged_steps = 0
+            elif (self._slack_streak >= 3
+                  and p95 < 0.5 * self.alpha * slo_t
+                  and self._shrink_share()):
+                # deep slack and nothing left to grow: probe one share rung
+                # down — gives capacity back to the cluster; reverted by the
+                # throughput guard / violation undo if the slice mattered
                 self._pending = (prev, thr)
                 self.converged_steps = 0
             else:

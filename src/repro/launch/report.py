@@ -116,6 +116,37 @@ def churn_tables(reports: dict) -> str:
     return "\n".join(parts)
 
 
+def partition_tables(reports: dict) -> str:
+    """Markdown for a spatial-partitioning run ({policy: ClusterEngine
+    report}, the structure examples/partition_serve.py dumps): the policy
+    comparison (heterogeneous shares + cheap resizes vs the uniform-MTL
+    baseline) and the per-tenant share table of the best policy."""
+    parts = ["| policy | goodput | throughput | resizes | resize stalls | "
+             "equiv migration stalls | migrations | migration stalls | "
+             "conserved |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for policy, rep in reports.items():
+        a = rep["aggregate"]
+        parts.append(
+            f"| {policy} | {a['goodput']:.1f}/s | "
+            f"{a['aggregate_throughput']:.1f}/s | {a['resizes']} | "
+            f"{a['resize_stall_s']:.2f}s | "
+            f"{a['resize_equiv_migration_stall_s']:.1f}s | "
+            f"{a['migrations']} | {a['migration_stall_s']:.1f}s | "
+            f"{'yes' if a['conserved'] else 'NO'} |")
+    best = reports.get("het") or next(iter(reports.values()))
+    parts.append("\n| job | dnn/dataset | device | share | bs | mtl | "
+                 "resizes | thr/s | attain |")
+    parts.append("|---|---|---|---|---|---|---|---|---|")
+    for r in best["per_job"]:
+        share = f"{r['share']:.3f}" if r.get("share") is not None else "—"
+        parts.append(
+            f"| {r['job_id']} | {r['dnn']} | {r['device']} | {share} | "
+            f"{r['bs']} | {r['mtl']} | {r.get('resizes', 0)} | "
+            f"{r['throughput']:.1f} | {r['slo_attainment']:.3f} |")
+    return "\n".join(parts)
+
+
 def profile_store_tables(store) -> str:
     """Markdown summary of a cross-run profile store: what knowledge the
     next run starts with (tuned tiles + generation, persisted surface
@@ -148,6 +179,21 @@ def profile_store_tables(store) -> str:
                 f"| {mk} | {len(samples)} | "
                 f"{float(np.quantile(samples, 0.5)) * 1e3:.1f}ms | "
                 f"{float(np.quantile(samples, 0.9)) * 1e3:.1f}ms |")
+    interference = store.section("interference")
+    if interference:
+        parts.append("\n| partition interference | samples | "
+                     "median inflation |")
+        parts.append("|---|---|---|")
+        for ik in sorted(interference):
+            rung, _, share = ik.rpartition("|share=")
+            try:
+                factor = store.interference_factor(rung, float(share))
+            except (TypeError, ValueError):
+                continue
+            if factor is None:
+                continue
+            n = len(interference[ik].get("samples", []))
+            parts.append(f"| {ik} | {n} | x{factor:.2f} |")
     return "\n".join(parts)
 
 
@@ -167,6 +213,8 @@ def main() -> None:
                     help="cluster_serve.py --json output to tabulate")
     ap.add_argument("--churn", default=None,
                     help="cluster_churn.py --json output to tabulate")
+    ap.add_argument("--partition", default=None,
+                    help="partition_serve.py --json output to tabulate")
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="cross-run profile store dir to summarize "
                          "(perf.profile_store)")
@@ -196,6 +244,10 @@ def main() -> None:
         parts.append("\n### Online churn — admission/draining with "
                      "migration-aware re-placement\n")
         parts.append(churn_tables(json.load(open(args.churn))))
+    if args.partition and os.path.exists(args.partition):
+        parts.append("\n### Spatial partitioning — heterogeneous shares "
+                     "vs uniform multi-tenancy\n")
+        parts.append(partition_tables(json.load(open(args.partition))))
     if args.store:
         from repro.perf.profile_store import ProfileStore
         parts.append("\n### Cross-run profile store\n")

@@ -11,6 +11,8 @@ whole 30-job Table-4 trace on a simulated cluster.
         --controller hybrid --seconds 240
     PYTHONPATH=src python -m repro.launch.serve --churn --devices 5 \
         --seconds 150 --churn-policy surface
+    PYTHONPATH=src python -m repro.launch.serve --partition \
+        --partition-policy het --devices 3 --seconds 120
 """
 
 from __future__ import annotations
@@ -94,6 +96,15 @@ def main() -> None:
                     choices=["union", "dynamic", "surface"],
                     help="placement policy for --churn (see "
                          "serving.cluster.run_churn_cluster)")
+    ap.add_argument("--partition", action="store_true",
+                    help="spatial partitioning (MPS/MIG-style slices): "
+                         "serve the mixed small/large trace with the "
+                         "share knob active")
+    ap.add_argument("--partition-policy", default="het",
+                    choices=["uniform", "het", "het-mig"],
+                    help="uniform = 1/k time-share baseline (same pricing "
+                         "model, migrations); het = heterogeneous MPS "
+                         "shares + cheap resizes; het-mig = MIG grid")
     ap.add_argument("--devices", type=int, default=None,
                     help="fleet size for --cluster / --churn "
                          "(default 12 / 5)")
@@ -132,6 +143,34 @@ def main() -> None:
             # generation that staleness-gates the persisted surface rows
             # must come from the SAME document the rows live in
             autotune.configure(cache_dir=args.profile_store)
+
+    if args.partition:
+        from repro.serving.cluster import run_partition_cluster
+        if args.controller not in ("dnnscaler", "hybrid"):
+            ap.error("--partition supports --controller dnnscaler or hybrid")
+        mode = "hybrid" if args.controller == "hybrid" else "auto"
+        rep = run_partition_cluster(args.partition_policy, mode=mode,
+                                    n_devices=args.devices or 3,
+                                    horizon_s=args.seconds or 120.0,
+                                    seed=args.seed, profile_store=store)
+        agg = rep["aggregate"]
+        assert agg["conserved"], "request conservation violated"
+        print(f"partition[{args.partition_policy}/{mode}]: {agg['jobs']} "
+              f"tenancies on {agg['devices']} devices "
+              f"(kind={agg['partition']}) — goodput {agg['goodput']:.1f}/s, "
+              f"throughput {agg['aggregate_throughput']:.1f}/s")
+        print(f"  {agg['resizes']} resizes "
+              f"({agg['resize_stall_s']:.2f}s stalls vs "
+              f"{agg['resize_equiv_migration_stall_s']:.1f}s had each been "
+              f"a migration), {agg['migrations']} migrations "
+              f"({agg['migration_stall_s']:.1f}s)")
+        for r in rep["per_job"]:
+            share = f"{r['share']:.3f}" if r["share"] is not None else "—"
+            print(f"  job {r['job_id']:>5} {r['dnn']:<26} share {share:>6} "
+                  f"bs {r['bs']:>3} mtl {r['mtl']:>2} "
+                  f"thr {r['throughput']:>7.1f}/s "
+                  f"attain {r['slo_attainment']:.3f}")
+        return
 
     if args.churn:
         from repro.serving.cluster import run_churn_cluster

@@ -246,17 +246,32 @@ def flash_attention(
     logit_cap: Optional[float] = None,
     q_offset: int = 0,           # absolute position of q[0] (prefill continuation)
     kv_valid_len: Optional[int] = None,    # mask k positions >= this
-    block_q: int = 256,
-    block_k: int = 512,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
     seq_axis: Optional[str] = None,  # shard q blocks over this mesh axis
 ) -> Array:
     """Online-softmax attention, O(block_q * Tk) live memory per step,
     custom VJP with blockwise recomputation (differentiable; seq_axis is a
-    forward-only sequence-parallel mode for prefill)."""
+    forward-only sequence-parallel mode for prefill).
+
+    Block sizes left None defer to the autotune cache (the same
+    per-(shape-class, dtype, backend) lookup the Pallas wrappers use);
+    explicit kwargs always win, and an empty cache falls back to the
+    historical 256/512 defaults."""
     B, Tq, H, hd = q.shape
     _, Tk, KV, _ = k.shape
     assert H % KV == 0, (H, KV)
     G = H // KV
+
+    if block_q is None or block_k is None:
+        from repro.perf import autotune
+        cfg = autotune.lookup("flash_attention", q.dtype, BKV=B * KV, G=G,
+                              hd=hd, Tq=max(Tq, 1), Tk=max(Tk, 1),
+                              causal=causal)
+        if block_q is None:
+            block_q = cfg["block_q"] if cfg else 256
+        if block_k is None:
+            block_k = cfg["block_k"] if cfg else 512
 
     block_q = min(block_q, max(Tq, 1))
     block_k = min(block_k, max(Tk, 1))

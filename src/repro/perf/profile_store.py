@@ -221,16 +221,21 @@ class ProfileStore:
         if row is None:
             return False
         sum_, cnt = row
-        if int((cnt > 0).sum()) < min_points or cnt[0, 0] <= 0:
+        # the (1,1) normalizer lives at the largest share rung with data
+        # ((bs=1, mtl=1) itself on the default single-rung grid)
+        if int((cnt > 0).sum()) < min_points or not (cnt[0, 0] > 0).any():
             return False                 # too sparse / no (1,1) normalizer
         sk = self.surface_key(signature, device_class)
         rec = self.get("surfaces", sk)
+        share_values = [float(s)
+                        for s in getattr(lib, "share_values", (1.0,))]
         if (isinstance(rec, dict)
                 and (not tile_dependent
                      or rec.get("autotune_generation")
                      == int(autotune_generation))
                 and rec.get("bs_values") == list(lib.bs_values)
-                and rec.get("mtl_values") == list(lib.mtl_values)):
+                and rec.get("mtl_values") == list(lib.mtl_values)
+                and rec.get("share_values", [1.0]) == share_values):
             try:
                 sum_ = sum_ + np.asarray(rec["sum"], np.float64)
                 cnt = cnt + np.asarray(rec["cnt"], np.int64)
@@ -241,6 +246,7 @@ class ProfileStore:
             "device_class": device_class,
             "bs_values": list(lib.bs_values),
             "mtl_values": list(lib.mtl_values),
+            "share_values": share_values,
             "sum": np.asarray(sum_, np.float64).tolist(),
             "cnt": np.asarray(cnt, np.int64).tolist(),
             "points": int((np.asarray(cnt) > 0).sum()),
@@ -260,7 +266,9 @@ class ProfileStore:
             #                              (sim rows are tile-independent
             #                              and skip this gate)
         if (rec.get("bs_values") != list(lib.bs_values)
-                or rec.get("mtl_values") != list(lib.mtl_values)):
+                or rec.get("mtl_values") != list(lib.mtl_values)
+                or rec.get("share_values", [1.0])
+                != [float(s) for s in getattr(lib, "share_values", (1.0,))]):
             return False
         try:
             sum_ = np.asarray(rec["sum"], np.float64)
@@ -271,7 +279,7 @@ class ProfileStore:
             return False
         if (cnt < 0).any() or not np.isfinite(sum_).all() or (sum_ < 0).any():
             return False
-        if cnt[0, 0] <= 0 or (sum_[cnt > 0] <= 0).any():
+        if not (cnt[0, 0] > 0).any() or (sum_[cnt > 0] <= 0).any():
             return False                 # need the (1,1) normalizer
         return True
 
@@ -318,6 +326,36 @@ class ProfileStore:
         if evicted:
             self.save()
         return {"loaded": [sk for sk, _ in loaded], "evicted": evicted}
+
+    # -- partition interference: measured slice-proxy inflation ---------------
+    def record_interference(self, key: str, share: float, wall_s: float,
+                            inflated_s: float) -> None:
+        """One real-executor partition-proxy measurement: the raw wall
+        step and the slice-inflated step actually served, per
+        (signature|device-class) key and share rung.  Ring-buffered like
+        the migration samples."""
+        if not (np.isfinite(wall_s) and np.isfinite(inflated_s)) \
+                or wall_s <= 0 or inflated_s <= 0:
+            return
+        rung = f"{key}|share={share:.4f}"
+        rec = self.get("interference", rung)
+        samples = list(rec.get("samples", [])) if isinstance(rec, dict) else []
+        samples.append([float(wall_s), float(inflated_s)])
+        self.put("interference", rung,
+                 {"samples": samples[-MAX_MIGRATION_SAMPLES:]})
+
+    def interference_factor(self, key: str, share: float) -> Optional[float]:
+        """Median measured inflation (inflated / wall) for one rung, or
+        None without samples."""
+        rec = self.get("interference", f"{key}|share={share:.4f}")
+        if not isinstance(rec, dict):
+            return None
+        ratios = [i / w for w, i in rec.get("samples", [])
+                  if isinstance(w, (int, float)) and w > 0
+                  and isinstance(i, (int, float)) and i > 0]
+        if not ratios:
+            return None
+        return float(np.median(np.asarray(ratios)))
 
     # -- migrations: measured kill+relaunch calibration -----------------------
     def record_migration(self, key: str, seconds: float) -> None:

@@ -42,6 +42,27 @@ This module adds the missing layer:
     reconfiguration.  `static_union=True` disables all of this (placement
     fixed over the union of every tenancy that ever appears) — the
     baseline the churn example compares against.
+  * Spatial partitioning (`partition="mps"|"mig"` — serving/partition.py):
+    tenancies are placed into explicit compute/memory SLICES of a device
+    instead of uniform time-shares.  Each job holds a granted share
+    (heterogeneous across co-residents), priced through
+    `device_model.part_latency_grid` — calibrated so uniform 1/k MPS
+    grants reproduce the paper's MTL curves bit-identically.  The
+    HybridScaler's third axis requests shares from a discrete ladder; the
+    engine mediates grants against device headroom (`note_share_cap` /
+    `note_share_grant`).  Churn re-placement RESIZES partitions (MPS
+    set-percentage / MIG reconfigure, contexts stay alive — cheap,
+    store-calibrated under a `resize|` key) instead of paying the
+    kill+relaunch migration round; `partition_uniform=True` is the
+    uniform-MTL baseline under the same pricing model, where every share
+    change is still a full migration.  `run_partition_cluster` compares
+    the two on a mixed small/large-DNN trace.
+  * Lockstep fairness (`stall_cap_s`): a wall-clock compile or migration
+    stall charged to a sub-millisecond simulated job clock starves that
+    job in the lockstep loop until every peer catches up.  The cap bounds
+    the clock charge per event (excess recorded in `stall_capped_s`,
+    divergence tracked in `max_clock_skew_s`), keeping clock skew bounded
+    in real-executor churn.
   * `run_paper_cluster` serves the 30 Table-4 jobs statically;
     `run_churn_cluster` is the churn scenario under {static-union, dynamic
     re-placement, dynamic + shared surface} policies.
@@ -58,6 +79,7 @@ import numpy as np
 
 from repro.perf import autotune
 from repro.serving import device_model as dm
+from repro.serving import partition as pt
 from repro.serving import tenancy
 from repro.serving.engine import Action, OpenLoopQueue, reconfig_stall
 from repro.serving.executor import SimExecutor
@@ -66,6 +88,13 @@ from repro.serving.workload import ChurnJob
 
 PLACEMENT_ALPHA = 0.85   # the scalers' hysteresis floor (paper alpha)
 CKPT_TRANSFER_BPS = 8e9  # DCN bandwidth for TPU submesh checkpoint moves
+PART_RESIZE_S = 0.25     # modeling default for one partition resize (MPS
+#                          set-percentage / MIG reconfigure): the contexts
+#                          keep running — no kill+relaunch round — so it is
+#                          an order of magnitude below the migration cost.
+#                          Real executors calibrate it through the profile
+#                          store exactly like migrations (key prefix
+#                          "resize|").
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +191,8 @@ class _JobState:
         #                                 have charged (vs the calibrated
         #                                 stalls actually charged)
         self.measured_migration_s = 0.0  # instrumented kill+relaunch wall
+        self.resizes = 0                 # partition-mode share changes
+        self.resize_stall_s = 0.0
         self.prev = Action(bs=1, mtl=1)
         self.stall_time = 0.0
         self.arrival_rate = arrival_rate
@@ -190,7 +221,29 @@ class ClusterEngine:
                  static_union: bool = False, anticipate: bool = False,
                  surface_library=None, ckpt_bps: float = CKPT_TRANSFER_BPS,
                  executor_factory: Optional[Callable] = None,
-                 profile_store=None):
+                 profile_store=None, partition: Optional[str] = None,
+                 partition_resize_s: float = PART_RESIZE_S,
+                 partition_uniform: bool = False,
+                 stall_cap_s: Optional[float] = None):
+        if partition not in (None, "mps", "mig"):
+            raise ValueError(f"unknown partition kind {partition!r}")
+        self.partition = partition
+        self.partition_resize_s = partition_resize_s
+        # the uniform-MTL baseline under the SAME spatial pricing model:
+        # grants pinned at 1/k (uniform MPS is calibrated bit-identical to
+        # MTL time-slicing), every share change charged as a full
+        # kill+relaunch migration — isolating exactly what heterogeneous
+        # shares + cheap resizes buy
+        self.partition_uniform = partition_uniform
+        # lockstep fairness: one wall-clock compile/migration stall charged
+        # to a sub-millisecond simulated job clock makes that job starve in
+        # the lockstep loop until every peer catches up.  `stall_cap_s`
+        # bounds the skew: any single event charges at most this much to
+        # the job's CLOCK (metrics still record the full cost via
+        # `stall_capped_s`), so clock divergence stays bounded.
+        self.stall_cap_s = stall_cap_s
+        self.stall_capped_s = 0.0
+        self.max_clock_skew_s = 0.0
         self.fleet = list(fleet)
         self.controller_factory = controller_factory
         self.window_size = window
@@ -223,6 +276,15 @@ class ClusterEngine:
         self.compile_stall_s = 0.0
         self.migration_stall_s = 0.0
         self.migration_modeled_s = 0.0
+        self.resizes = 0
+        self.resize_stall_s = 0.0
+        self.resize_equiv_migration_s = 0.0   # what full migrations would
+        #                                       have cost the same events
+        self._grant: dict = {}                # state idx -> partition share
+        self._timeshared: set = set()         # devices whose tenant count
+        #                                       outgrew the legal grid and
+        #                                       fell back to 1/k time-
+        #                                       multiplexing
         self.admissions = 0
         self.drains = 0
         self.migrations = 0
@@ -250,8 +312,51 @@ class ClusterEngine:
         assign = self._initial_placement(entries)
         counts = [assign.count(d) for d in range(len(self.fleet))]
         for e, d in zip(entries, assign):
-            i = self._spawn(e, d, counts[d])
+            share = None
+            if self.partition is not None:
+                share = self._legal_share(1.0 / counts[d])
+            i = self._spawn(e, d, counts[d], share=share)
             self.residents[d].append(i)
+
+    # -- partition helpers ----------------------------------------------------
+    def _legal_share(self, share: float) -> float:
+        """Snap a share onto the backend's legal grid (MIG profiles; MPS
+        is continuous)."""
+        if self.partition == "mig":
+            return pt.snap("mig", share)
+        return share
+
+    def _min_grant(self) -> float:
+        return pt.share_ladder(self.partition)[0]
+
+    def _tenant_slice(self, share: float, tenants: int,
+                      d: Optional[int] = None) -> pt.TenantSlice:
+        # a time-multiplexed (over-subscribed) device shares memory paths
+        # like MPS even under a MIG kind — no hardware isolation left
+        iso = (1.0 if self.partition == "mig"
+               and (d is None or d not in self._timeshared) else 0.0)
+        k = round(1.0 / share) if share > 0 else 1
+        # uniform 1/k grants carry the exact integer slowdown so partition
+        # pricing is bit-identical to the MTL curves at equal share
+        inv = float(k) if k >= 1 and share == 1.0 / k else 1.0 / share
+        return pt.TenantSlice(share=share, mem_fraction=share,
+                              inv_share=inv, tenants=tenants, isolation=iso)
+
+    def _headroom(self, d: int) -> float:
+        used = sum(self._grant.get(j, 0.0) for j in self.residents[d])
+        return max(0.0, 1.0 - used)
+
+    def partition_plan(self, d: int) -> pt.PartitionPlan:
+        """The device's current spatial plan (report / legality checks).
+        An over-subscribed device reports as time-multiplexed ("mps") —
+        its 1/k grants are no longer spatial slices on the MIG grid."""
+        k = len(self.residents[d])
+        slices = tuple(self._tenant_slice(self._grant.get(j, 0.0), k, d)
+                       for j in self.residents[d])
+        kind = self.partition or "mps"
+        if d in self._timeshared:
+            kind = "mps"
+        return pt.PartitionPlan(kind=kind, slices=slices)
 
     # -- construction helpers -----------------------------------------------
     def _initial_placement(self, entries: Sequence[ChurnJob]) -> List[int]:
@@ -293,8 +398,25 @@ class ClusterEngine:
         dev = spec.device.share(share) if share < 1.0 else spec.device
         return dev, None, share
 
-    def _make_executor(self, job, d: int, k: int, seed: int):
+    def _make_executor(self, job, d: int, k: int, seed: int,
+                       part_share: Optional[float] = None):
         spec = self.fleet[d]
+        if self.partition is not None and part_share is not None:
+            # spatial partition: the tenant holds an explicit slice instead
+            # of the uniform 1/k time-share
+            ts = self._tenant_slice(part_share, k, d)
+            if self.executor_factory is not None:
+                ex = self.executor_factory(job, spec, part_share, None, seed)
+                if hasattr(ex, "set_partition"):
+                    ex.set_partition(ts)
+            else:
+                ex = SimExecutor(job.profile(), device=spec.device,
+                                 seed=seed, partition=ts)
+            try:
+                ex._cluster_share = part_share
+            except AttributeError:
+                pass
+            return ex
         dev, mesh, share = self._executor_params(spec, k)
         if self.executor_factory is not None:
             ex = self.executor_factory(job, spec, share, mesh, seed)
@@ -310,13 +432,20 @@ class ClusterEngine:
             pass
         return ex
 
-    def _spawn(self, entry: ChurnJob, d: int, k: int) -> int:
+    def _spawn(self, entry: ChurnJob, d: int, k: int,
+               share: Optional[float] = None) -> int:
         """Create the per-job state on device d (with k co-residents)."""
         i = len(self.states)
         job = entry.job
-        serving_ex = self._make_executor(job, d, k, self.seed + i)
-        profiling_ex = self._make_executor(job, d, k, self.seed + 1000 + i)
+        if share is not None:
+            self._grant[i] = share
+        serving_ex = self._make_executor(job, d, k, self.seed + i,
+                                         part_share=share)
+        profiling_ex = self._make_executor(job, d, k, self.seed + 1000 + i,
+                                           part_share=share)
         controller = self.controller_factory(job, profiling_ex)
+        if share is not None and hasattr(controller, "note_share_grant"):
+            controller.note_share_grant(share)
         rate = (entry.arrival_rate if entry.arrival_rate is not None
                 else self._arrival_rates.get(job.job_id))
         st = _JobState(job, controller, serving_ex, window=self.window_size,
@@ -484,6 +613,15 @@ class ClusterEngine:
                  for j in r] for r in self.residents]
 
     # -- churn: admission, drain, migration ---------------------------------
+    def _capped(self, cost: float) -> float:
+        """Lockstep-fairness cap: the clock charge for one stall event.
+        The excess is recorded in `stall_capped_s`, never silently lost."""
+        if self.stall_cap_s is None:
+            return cost
+        charged = min(cost, self.stall_cap_s)
+        self.stall_capped_s += cost - charged
+        return charged
+
     def _charge_migration(self, j: int, d: int, k: int, *, at: float,
                           kind: str) -> None:
         """One migration round for state j on device d (k co-residents):
@@ -517,14 +655,15 @@ class ClusterEngine:
             st.executor = self._make_executor(st.job, d, k, seed)
         st.migration_modeled_s += modeled
         self.migration_modeled_s += modeled
-        st.clock += cost
+        charged = self._capped(cost)
+        st.clock += charged
         st.epoch += 1
-        st.stall_time += cost
-        st.migration_stall_s += cost
+        st.stall_time += charged
+        st.migration_stall_s += charged
         st.migrations += 1
-        st.acc.total_time += cost
-        self.stall_time += cost
-        self.migration_stall_s += cost
+        st.acc.total_time += charged
+        self.stall_time += charged
+        self.migration_stall_s += charged
         self.migrations += 1
         st.window.reset()              # the latency surface just changed
         if hasattr(st.controller, "note_capacity_change"):
@@ -532,6 +671,253 @@ class ClusterEngine:
         self.churn_log.append((at, kind, st.job.job_id, spec.label(d)))
         if self._heap is not None:
             heapq.heappush(self._heap, (st.clock, j, st.epoch))
+
+    # -- partition mode: resize instead of migrate ---------------------------
+    def _resize_cost(self, st: _JobState, spec: DeviceSpec) -> float:
+        """Stall seconds for one partition resize: an MPS set-percentage /
+        MIG reconfigure keeps the serving contexts alive, so it is far
+        below a kill+relaunch round.  Real executors calibrate it through
+        the profile store under a `resize|` key, exactly like migrations."""
+        if (self.profile_store is not None
+                and hasattr(st.executor, "cache_stats")):
+            cal = self.profile_store.migration_cost(
+                "resize|" + self._calibration_key(st, spec))
+            if cal is not None:
+                return cal
+        return self.partition_resize_s
+
+    def _charge_resize(self, j: int, d: int, new_share: float, *, at: float,
+                       kind: str = "resize",
+                       tenant_change: bool = False) -> None:
+        """Move state j's partition grant to `new_share` on its device:
+        update the executor's slice in place (no relaunch), charge the
+        cheap resize stall, and record what a full migration WOULD have
+        cost the same event (`resize_equiv_migration_s` — the comparison
+        the partition example pins)."""
+        st = self.states[j]
+        spec = self.fleet[d]
+        as_migration = self.partition_uniform
+        cost = (self._migration_cost(st, spec) if as_migration
+                else self._resize_cost(st, spec))
+        equiv = self._modeled_migration_cost(st, spec)
+        self._grant[j] = new_share
+        ts = self._tenant_slice(new_share, max(len(self.residents[d]), 1), d)
+        if hasattr(st.executor, "cache_stats"):
+            # real executor: instrument the reconfigure + re-warm round and
+            # feed the resize calibration (PR 4 store, `resize|` prefix)
+            t0 = time.perf_counter()
+            if hasattr(st.executor, "set_partition"):
+                st.executor.set_partition(ts)
+            if hasattr(st.executor, "warmup"):
+                st.executor.warmup(st.prev.bs, st.prev.mtl)
+            measured = time.perf_counter() - t0
+            if self.profile_store is not None:
+                self.profile_store.record_migration(
+                    "resize|" + self._calibration_key(st, spec), measured)
+        elif hasattr(st.executor, "set_partition"):
+            st.executor.set_partition(ts)
+        charged = self._capped(cost)
+        st.clock += charged
+        st.epoch += 1
+        st.stall_time += charged
+        st.acc.total_time += charged
+        self.stall_time += charged
+        if as_migration:               # uniform baseline: a reshare IS a
+            st.migration_stall_s += charged    # kill+relaunch round
+            st.migrations += 1
+            st.migration_modeled_s += equiv
+            self.migration_stall_s += charged
+            self.migrations += 1
+            self.migration_modeled_s += equiv
+        else:
+            st.resize_stall_s += charged
+            st.resizes += 1
+            self.resize_stall_s += charged
+            self.resizes += 1
+            self.resize_equiv_migration_s += equiv
+        st.window.reset()              # the latency surface just moved
+        ctrl = st.controller
+        if hasattr(ctrl, "note_share_grant"):
+            ctrl.note_share_grant(new_share)
+        if tenant_change and hasattr(ctrl, "note_capacity_change"):
+            ctrl.note_capacity_change(st.executor)
+        self.churn_log.append((at, kind, st.job.job_id, spec.label(d)))
+        if self._heap is not None:
+            heapq.heappush(self._heap, (st.clock, j, st.epoch))
+
+    def _refresh_slices(self, d: int) -> None:
+        """The device's tenant count changed: update every resident's
+        slice interference term in place (shares untouched — an MPS
+        repricing, not a reconfigure, so nothing is charged) and reset
+        their tail windows."""
+        k = max(len(self.residents[d]), 1)
+        for j in self.residents[d]:
+            st = self.states[j]
+            ts = self._tenant_slice(self._grant.get(j, 1.0), k, d)
+            if hasattr(st.executor, "set_partition"):
+                st.executor.set_partition(ts)
+            st.window.reset()
+
+    def _maybe_grant_resize(self, i: int, requested: float,
+                            at: float) -> None:
+        """Mediate a scaler's share request: grant up to the device's
+        headroom (snapped to the backend's legal grid), align the scaler
+        with the actual grant, and charge the resize."""
+        d = self.placement[i]
+        st = self.states[i]
+        cur = self._grant.get(i, 1.0)
+        new = requested
+        if requested > cur:
+            new = min(requested, cur + self._headroom(d))
+        new = self._legal_share(new)
+        if new <= 0.0 or abs(new - cur) <= 1e-9:
+            if hasattr(st.controller, "note_share_grant"):
+                st.controller.note_share_grant(cur)
+            return
+        self._charge_resize(i, d, new, at=at, kind="resize",
+                            tenant_change=False)
+
+    @staticmethod
+    def _struggling(st: _JobState) -> bool:
+        """A resident that is NOT keeping up — growing backlog or a tail
+        over its SLO — and therefore worth the stall of a bigger slice
+        (the one gate shared by `_reshare(optional=True)`, the partition
+        upsize, and the uniform-baseline drain path)."""
+        behind = (st.oq is not None and st.oq.backlog
+                  > 2 * max(st.prev.bs * st.prev.mtl, 1))
+        return behind or st.window.p95 > st.job.slo_s
+
+    def _partition_upsize(self, d: int, *, at: float) -> None:
+        """A drain freed share: hand it to residents that are actually
+        struggling (the same gate as `_reshare(optional=True)`); a
+        keeping-up resident is left alone."""
+        if d in self._timeshared:
+            k = len(self.residents[d])
+            if k * self._min_grant() <= 1.0 + pt.SHARE_TOL:
+                # the tenant count fits the grid again: leave the
+                # time-multiplex fallback, snapping every grant back
+                # onto a legal slice
+                self._timeshared.discard(d)
+                for j in list(self.residents[d]):
+                    legal = self._legal_share(self._grant.get(j, 0.0))
+                    if abs(legal - self._grant.get(j, 0.0)) > 1e-9:
+                        self._charge_resize(j, d, legal, at=at,
+                                            kind="resize",
+                                            tenant_change=True)
+        needy = [j for j in self.residents[d]
+                 if self._struggling(self.states[j])]
+        if not needy:
+            return
+        extra = self._headroom(d) / len(needy)
+        if extra <= 1e-9:
+            return
+        for j in needy:
+            new = self._legal_share(
+                min(1.0, self._grant.get(j, 0.0) + extra))
+            if new > self._grant.get(j, 0.0) + 1e-9:
+                self._charge_resize(j, d, new, at=at, kind="grow",
+                                    tenant_change=False)
+
+    def _admit_partition(self, entry: ChurnJob) -> int:
+        """Partition-mode admission: the newcomer takes a slice out of the
+        chosen device's HEADROOM; only when no device has a minimal slice
+        free are co-residents shrunk — via cheap resizes, never the
+        kill+relaunch migration round the uniform time-sharing path pays."""
+        job = entry.job
+        prof = job.profile()
+        min_g = self._legal_share(self._min_grant())
+        iso = 1.0 if self.partition == "mig" else 0.0
+        scored = []
+        for d, spec in enumerate(self.fleet):
+            k = len(self.residents[d]) + 1
+            head = self._headroom(d)
+            target = self._legal_share(1.0 / k)     # uniform entitlement
+            if self.partition_uniform:
+                needs_shrink = False
+                prospect = target
+            else:
+                needs_shrink = head < min_g - 1e-9
+                prospect = min_g if needs_shrink else \
+                    self._legal_share(min(max(head if head < target
+                                              else target, min_g), 1.0))
+            inv = 1.0 / prospect
+            lat = dm.part_latency(spec.device, prof, 1, 1, inv_share=inv,
+                                  tenants=k, isolation=iso)
+            feasible = lat <= PLACEMENT_ALPHA * job.slo_s
+            load = sum(self.states[j].job.profile().occupancy
+                       for j in self.residents[d])
+            scored.append(((not feasible, needs_shrink, -head, load, d),
+                           d, prospect, needs_shrink))
+        _, d, prospect, needs_shrink = min(scored)
+        if self.partition_uniform:
+            # every resident is re-granted its uniform 1/k slice; each
+            # change is a full kill+relaunch migration (the baseline)
+            knew = len(self.residents[d]) + 1
+            prospect = self._legal_share(1.0 / knew)
+            for j in list(self.residents[d]):
+                if abs(self._grant.get(j, 0.0) - prospect) > 1e-9:
+                    self._charge_resize(j, d, prospect, at=entry.admit_s,
+                                        kind="migrate", tenant_change=True)
+        elif needs_shrink:
+            if self.partition == "mig":
+                # discrete grid: residents step down one PROFILE at a
+                # time, largest slice first, until the smallest profile
+                # fits — a proportional scale would snap right back to the
+                # rung a floor-sized resident already holds and free
+                # nothing, silently oversubscribing the device
+                progress = True
+                while (self._headroom(d) < min_g - pt.SHARE_TOL
+                       and progress):
+                    progress = False
+                    order = sorted(self.residents[d],
+                                   key=lambda j: -self._grant.get(j, 0.0))
+                    for j in order:
+                        nxt = pt.mig_step_down(self._grant.get(j, 0.0))
+                        if nxt is None:
+                            continue
+                        self._charge_resize(j, d, nxt, at=entry.admit_s,
+                                            kind="shrink",
+                                            tenant_change=True)
+                        progress = True
+                        if self._headroom(d) >= min_g - pt.SHARE_TOL:
+                            break
+            else:
+                used = sum(self._grant.get(j, 0.0)
+                           for j in self.residents[d])
+                scale = max(1.0 - min_g, 1e-9) / max(used, 1e-9)
+                for j in list(self.residents[d]):
+                    new = self._legal_share(self._grant.get(j, 0.0) * scale)
+                    if new < self._grant.get(j, 0.0) - 1e-9:
+                        self._charge_resize(j, d, new, at=entry.admit_s,
+                                            kind="shrink",
+                                            tenant_change=True)
+            head = self._headroom(d)
+            if head < min_g - pt.SHARE_TOL:
+                # more tenants than the grid has slices: no legal spatial
+                # plan exists, so the device falls back to time-multiplexed
+                # equal shares — the same degradation the TPU submesh path
+                # takes when jobs outnumber chips.  Every resident is
+                # re-granted 1/k; `partition_plan` reports the device as
+                # "mps" (time-shared) so legality reflects reality.
+                knew = len(self.residents[d]) + 1
+                eq = 1.0 / knew
+                self._timeshared.add(d)
+                for j in list(self.residents[d]):
+                    if abs(self._grant.get(j, 0.0) - eq) > 1e-9:
+                        self._charge_resize(j, d, eq, at=entry.admit_s,
+                                            kind="shrink",
+                                            tenant_change=True)
+                prospect = eq
+            else:
+                prospect = self._legal_share(max(min(head, prospect),
+                                                 min_g))
+        i = self._spawn(entry, d, len(self.residents[d]) + 1, share=prospect)
+        self.residents[d].append(i)
+        self.admissions += 1
+        self.churn_log.append((entry.admit_s, "admit", job.job_id,
+                               self.fleet[d].label(d)))
+        self._refresh_slices(d)
+        return i
 
     def _reshare(self, d: int, *, at: float,
                  exclude: Optional[int] = None,
@@ -555,12 +941,8 @@ class ClusterEngine:
             old_share = getattr(st.executor, "_cluster_share", None)
             if old_share is not None and old_share == new_share:
                 continue               # e.g. a 4->3 drain on a (4,4) slice
-            if optional:
-                behind = (st.oq is not None and st.oq.backlog
-                          > 2 * max(st.prev.bs * st.prev.mtl, 1))
-                violating = st.window.p95 > st.job.slo_s
-                if not (behind or violating):
-                    continue
+            if optional and not self._struggling(st):
+                continue
             self._charge_migration(j, d, k, at=at, kind="migrate")
 
     def _best_relocation_for(self, job, rate: Optional[float], at: float,
@@ -701,6 +1083,8 @@ class ClusterEngine:
         migration-aware relocation considered whenever direct placement
         leaves the new job underserved (or infeasible); then charge
         co-residents their share change."""
+        if self.partition is not None:
+            return self._admit_partition(entry)
         job = entry.job
         rate = (entry.arrival_rate if entry.arrival_rate is not None
                 else self._arrival_rates.get(job.job_id))
@@ -759,8 +1143,26 @@ class ClusterEngine:
         self.churn_log.append((st.clock, "drain", st.job.job_id,
                                self.fleet[d].label(d)))
         if not self.static_union:
-            self._reshare(d, at=st.clock, optional=True)
-            self._rebalance(st.clock)
+            if self.partition is not None:
+                if self.partition_uniform:
+                    # uniform baseline mirrors the legacy drain: strugglers
+                    # MAY upsize to the new 1/k — paying a migration round
+                    k = max(len(self.residents[d]), 1)
+                    share = self._legal_share(1.0 / k)
+                    for j in list(self.residents[d]):
+                        if self._struggling(self.states[j]) and \
+                                share > self._grant.get(j, 0.0) + 1e-9:
+                            self._charge_resize(j, d, share, at=st.clock,
+                                                kind="migrate",
+                                                tenant_change=True)
+                else:
+                    # freed share goes to struggling residents via cheap
+                    # resizes; the interference term relaxes for everyone
+                    self._partition_upsize(d, at=st.clock)
+                self._refresh_slices(d)
+            else:
+                self._reshare(d, at=st.clock, optional=True)
+                self._rebalance(st.clock)
         return True
 
     # -- cross-run persistence ----------------------------------------------
@@ -794,29 +1196,52 @@ class ClusterEngine:
         self.profile_store.save()
 
     # -- one serving step for one job ---------------------------------------
-    def _step(self, st: _JobState) -> None:
+    def _step(self, st: _JobState, i: Optional[int] = None) -> None:
+        if i is None:
+            i = self.states.index(st)
         ctrl = st.controller
         if hasattr(ctrl, "set_slo"):
             ctrl.set_slo(st.job.slo_s)
+        if self.partition is not None and hasattr(ctrl, "note_share_cap"):
+            # the scaler's third axis may only request up to the device's
+            # current headroom on top of its own grant
+            d = self.placement[i]
+            ctrl.note_share_cap(min(1.0, self._grant.get(i, 1.0)
+                                    + self._headroom(d)))
         act = ctrl.action()
+        if (self.partition is not None and act.share is not None
+                and abs(act.share - self._grant.get(i, 1.0)) > 1e-9):
+            self._maybe_grant_resize(i, float(act.share), at=st.clock)
+            act = ctrl.action()          # re-read the grant-aligned action
         win_start = st.arrival_mark  # arrivals keep coming during any stall
         cost = reconfig_stall(st.prev, act, self.instance_launch_s,
                               self.instance_kill_s)
         if cost:
-            st.clock += cost
-            st.stall_time += cost
-            self.stall_time += cost
-            st.acc.total_time += cost
+            charged = self._capped(cost)
+            st.clock += charged
+            st.stall_time += charged
+            self.stall_time += charged
+            st.acc.total_time += charged
         if (act.bs, act.mtl) != (st.prev.bs, st.prev.mtl):
             st.window.reset()            # re-measure the tail at the new knobs
 
         res = st.executor.run_step(act.bs, act.mtl)
         comp = res.get("compile_time", 0.0)
         if comp:                         # AOT compile = stall, like a launch
+            comp = self._capped(comp)
             st.clock += comp
             st.acc.total_time += comp
             st.acc.compile_stall_s += comp
             self.compile_stall_s += comp
+        if (self.profile_store is not None
+                and res.get("partition_slowdown", 1.0) != 1.0
+                and res.get("wall_step_time")):
+            # real-executor capped-batch proxy: the measured interference
+            # (raw wall vs slice-inflated step) feeds the store
+            self.profile_store.record_interference(
+                self._calibration_key(st, self.fleet[self.placement[i]]),
+                self._grant.get(i, 1.0), res["wall_step_time"],
+                res["step_time"])
         t1 = st.clock + res["step_time"]
         slo = st.job.slo_s
         if st.oq is not None:            # open loop: queue + conservation
@@ -873,8 +1298,20 @@ class ClusterEngine:
             if t >= sim_time_limit:
                 continue                 # this job reached the horizon
             self.event_log.append((t, st.job.job_id))
-            self._step(st)
+            stalls_before = st.stall_time + st.acc.compile_stall_s
+            self._step(st, i)
             steps += 1
+            if st.stall_time + st.acc.compile_stall_s > stalls_before:
+                # lockstep divergence: how far this job's clock ran ahead
+                # of the slowest active peer (a stall-inflated clock
+                # starves here until everyone catches up — `stall_cap_s`
+                # bounds it).  Only a stall moves the clock by more than
+                # one serving step, so the O(jobs) scan runs only then.
+                others = [s.clock for s in self.states
+                          if s.active and s is not st]
+                if others:
+                    self.max_clock_skew_s = max(self.max_clock_skew_s,
+                                                st.clock - min(others))
             if self._maybe_drain(i):
                 continue
             heapq.heappush(heap, (st.clock, i, st.epoch))
@@ -891,7 +1328,16 @@ class ClusterEngine:
             # fits under the SLO there; infeasible jobs are served
             # best-effort and flagged, not hidden
             k = len(self.residents[d]) + (0 if i in self.residents[d] else 1)
-            base = _base_latency(self.fleet[d], st.job.profile(), max(k, 1))
+            if self.partition is not None and self._grant.get(i):
+                ts = self._tenant_slice(self._grant[i], max(k, 1), d)
+                base = dm.part_latency(self.fleet[d].device,
+                                       st.job.profile(), 1, 1,
+                                       inv_share=ts.inv_share,
+                                       tenants=ts.tenants,
+                                       isolation=ts.isolation)
+            else:
+                base = _base_latency(self.fleet[d], st.job.profile(),
+                                     max(k, 1))
             goodput_items += st.completed * s["slo_attainment"]
             per_job.append({
                 "job_id": st.job.job_id,
@@ -916,6 +1362,10 @@ class ClusterEngine:
                 "migrations": int(st.migrations),
                 "migration_stall_s": float(st.migration_stall_s),
                 "migration_modeled_s": float(st.migration_modeled_s),
+                "share": (float(self._grant[i]) if i in self._grant
+                          else None),
+                "resizes": int(st.resizes),
+                "resize_stall_s": float(st.resize_stall_s),
                 "submitted": (st.oq.submitted if st.oq is not None
                               else st.submitted),
                 "completed": st.completed,
@@ -944,6 +1394,13 @@ class ClusterEngine:
                 "admissions": int(self.admissions),
                 "drains": int(self.drains),
                 "migrations": int(self.migrations),
+                "partition": self.partition,
+                "resizes": int(self.resizes),
+                "resize_stall_s": float(self.resize_stall_s),
+                "resize_equiv_migration_stall_s":
+                    float(self.resize_equiv_migration_s),
+                "stall_capped_s": float(self.stall_capped_s),
+                "max_clock_skew_s": float(self.max_clock_skew_s),
                 "conserved": bool(conserved),
                 "min_attainment":
                     min((r["slo_attainment"] for r in per_job), default=1.0),
@@ -959,7 +1416,8 @@ class ClusterEngine:
 # The first-class scenario: the paper's 30 jobs as one cluster workload.
 # ---------------------------------------------------------------------------
 def paper_controller_factory(mode: str = "auto", *, max_mtl: int = 10,
-                             library_jobs: int = 8, surface=None):
+                             library_jobs: int = 8, surface=None,
+                             share_ladder=None):
     """Factory of per-job controllers for `ClusterEngine`.
 
     mode: "auto" (the paper's B-or-MT pick), "hybrid", "B", "MT" — all via
@@ -998,7 +1456,8 @@ def paper_controller_factory(mode: str = "auto", *, max_mtl: int = 10,
         return DNNScalerController(executor, job.slo_s, estimator=est,
                                    max_mtl=cap, mode=mode,
                                    surface_library=surface,
-                                   surface_key=job.job_id)
+                                   surface_key=job.job_id,
+                                   share_ladder=share_ladder)
 
     return make
 
@@ -1067,4 +1526,49 @@ def run_churn_cluster(policy: str = "surface", *,
             eng.store_report["loaded"])
         rep["aggregate"]["store_rows_evicted"] = len(
             eng.store_report["evicted"])
+    return rep
+
+
+PARTITION_POLICIES = ("uniform", "het", "het-mig")
+
+
+def run_partition_cluster(policy: str = "het", *,
+                          trace: Optional[Sequence[ChurnJob]] = None,
+                          fleet: Optional[Sequence[DeviceSpec]] = None,
+                          n_devices: int = 3, horizon_s: float = 120.0,
+                          mode: str = "hybrid", seed: int = 0,
+                          trace_kwargs: Optional[dict] = None,
+                          profile_store=None) -> dict:
+    """The spatial-partitioning scenario on a mixed small/large-DNN trace.
+
+    policy: "uniform" — the existing dynamic churn engine: co-residents
+                        each time-share an equal 1/k slice and every share
+                        change is a kill+relaunch migration (the uniform
+                        MTL baseline);
+            "het"     — MPS-style spatial partitions: heterogeneous shares
+                        per tenant, the HybridScaler's third (share) axis
+                        active, and churn handled by cheap partition
+                        RESIZES instead of migrations;
+            "het-mig" — the same with MIG-grid discrete shares (hardware
+                        isolation, shares snapped onto the profile grid).
+    """
+    if policy not in PARTITION_POLICIES:
+        raise ValueError(f"unknown partition policy {policy!r}")
+    from repro.serving.workload import mixed_partition_trace
+    if trace is None:
+        trace = mixed_partition_trace(horizon_s=horizon_s, seed=seed,
+                                      **(trace_kwargs or {}))
+    fleet = list(fleet) if fleet is not None else gpu_fleet(n_devices)
+    kind = {"uniform": "mps", "het": "mps", "het-mig": "mig"}[policy]
+    uniform = policy == "uniform"
+    ladder = None if uniform else pt.share_ladder(kind)
+    eng = ClusterEngine(
+        [], fleet, churn=trace,
+        controller_factory=paper_controller_factory(mode,
+                                                    share_ladder=ladder),
+        partition=kind, partition_uniform=uniform, seed=seed,
+        profile_store=profile_store)
+    rep = eng.run(sim_time_limit=horizon_s)
+    rep["aggregate"]["policy"] = policy
+    rep["aggregate"]["mode"] = mode
     return rep

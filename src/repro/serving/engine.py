@@ -35,6 +35,10 @@ from repro.serving.metrics import RunAccumulator, TailLatencyWindow
 class Action:
     bs: int = 1
     mtl: int = 1
+    share: Optional[float] = None   # requested partition share (3rd knob);
+    #                                 None = no spatial partitioning — the
+    #                                 engines ignore it, ClusterEngine's
+    #                                 partition mode mediates the grant
 
 
 def reconfig_stall(prev: Action, act: Action, launch_s: float,

@@ -40,14 +40,24 @@ class SimExecutor:
     """Closed-loop simulated executor for one job."""
 
     def __init__(self, profile: dm.JobProfile, device: dm.Device = dm.TESLA_P40,
-                 seed: int = 0, mesh_shape: Optional[tuple] = None):
+                 seed: int = 0, mesh_shape: Optional[tuple] = None,
+                 partition=None):
         self.profile = profile
         self.device = device
         self.sampler = dm.LatencySampler(seed=seed)
         self.mesh_shape = mesh_shape   # TPU mode: tenancy = submesh split
+        self.partition = partition     # TenantSlice: spatial slice pricing
         self.clock = 0.0
         self._lat_cache: dict = {}     # (bs, mtl) -> mean latency (exact)
         self._power_cache: dict = {}   # (bs, mtl) -> watts (deterministic)
+
+    def set_partition(self, ts) -> None:
+        """Resize this executor's spatial slice (MPS set-percentage / MIG
+        reconfigure): repricing only, no instance relaunch — the cheapness
+        the cluster's resize-instead-of-migrate path exploits."""
+        self.partition = ts
+        self._lat_cache.clear()
+        self._power_cache.clear()
 
     # -- pricing ------------------------------------------------------------
     def mean_latency(self, bs: int, mtl: int) -> float:
@@ -59,6 +69,12 @@ class SimExecutor:
         return lat
 
     def _price(self, bs: int, mtl: int) -> float:
+        if self.partition is not None:
+            ts = self.partition
+            return dm.part_latency(self.device, self.profile, bs, mtl,
+                                   inv_share=ts.inv_share,
+                                   tenants=ts.tenants,
+                                   isolation=ts.isolation)
         if self.mesh_shape is not None:
             # non-divisor MTLs over-partition (plan_at_least) instead of
             # returning inf — an inf step would poison the engine clock
@@ -75,6 +91,13 @@ class SimExecutor:
         vectorized call per tenancy plan instead of a Python double loop.
         Shape (len(bs_values), len(mtl_values))."""
         bs_values = np.asarray(bs_values)
+        if self.partition is not None:
+            ts = self.partition
+            return dm.part_latency_grid(self.device, self.profile,
+                                        bs_values, mtl_values,
+                                        inv_share=ts.inv_share,
+                                        tenants=ts.tenants,
+                                        isolation=ts.isolation)
         if self.mesh_shape is None:
             return dm.mt_latency_grid(self.device, self.profile,
                                       bs_values, mtl_values)
@@ -90,7 +113,13 @@ class SimExecutor:
         return np.stack(cols, axis=1)
 
     def fits(self, bs: int, mtl: int) -> bool:
-        return dm.fits_memory(self.device, self.profile, bs, mtl)
+        dev = self.device
+        if self.partition is not None:
+            # the tenant sees only its memory slice, not the whole HBM
+            import dataclasses
+            dev = dataclasses.replace(
+                dev, hbm_bytes=dev.hbm_bytes * self.partition.mem_fraction)
+        return dm.fits_memory(dev, self.profile, bs, mtl)
 
     # -- execution ----------------------------------------------------------
     def run_step(self, bs: int, mtl: int) -> dict:
@@ -173,7 +202,18 @@ class RealExecutor:
         self._param_bytes: Optional[float] = None
         self.cache_stats = ExecCacheStats()
         self._pending_compile = 0.0      # compile seconds not yet charged
+        self.partition = None            # TenantSlice: capped-batch proxy
         self.clock = 0.0
+
+    def set_partition(self, ts) -> None:
+        """Spatial-partition proxy for a single-process host: this process
+        cannot literally run inside an MPS percentage or MIG slice, so a
+        slice is emulated by inflating the measured wall clock with the
+        slice's calibrated slowdown (`TenantSlice.slowdown`) — the
+        capped-compute proxy.  The raw wall measurement is still reported
+        (``wall_step_time``) so callers can record the measured
+        interference ratio into the profile store."""
+        self.partition = ts
 
     # -- capacity -----------------------------------------------------------
     def bucket(self, n: int) -> int:
@@ -277,7 +317,10 @@ class RealExecutor:
         for b in staged:
             out = executable(self.params, b)
         jax.block_until_ready(out)
-        return (time.perf_counter() - t0) / iters
+        wall = (time.perf_counter() - t0) / iters
+        if self.partition is not None:
+            return wall * self.partition.proxy_slowdown()
+        return wall
 
     # -- execution ----------------------------------------------------------
     def run_step(self, bs: int, mtl: int) -> dict:
@@ -289,7 +332,10 @@ class RealExecutor:
         t0 = time.perf_counter()
         out = executable(self.params, staged)
         jax.block_until_ready(out)
-        lat = time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        slowdown = (self.partition.proxy_slowdown()
+                    if self.partition is not None else 1.0)
+        lat = wall * slowdown
         if gen != int(self._tile_generation()):
             # a tuning landed between the cache lookup and this serve:
             # the step above ran on superseded tiles.  Count it (the
@@ -304,6 +350,8 @@ class RealExecutor:
             "items": items,
             "compile_time": comp,
             "bucket_items": nb,
+            "wall_step_time": wall,
+            "partition_slowdown": slowdown,
             "request_latencies": np.full(min(items, 64), lat),
             "power_w": self.peak_w * 0.6,
             "throughput": items / lat,

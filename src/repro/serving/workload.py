@@ -136,6 +136,47 @@ def steady_capacity(job: Job, *, share: float = 1.0,
     return best[0]
 
 
+def mixed_partition_trace(*, horizon_s: float = 120.0, n_light: int = 4,
+                          heavy_load: float = 0.7, light_load: float = 0.6,
+                          seed: int = 0) -> List[ChurnJob]:
+    """A mixed small/large-DNN trace — the regime where heterogeneous
+    spatial shares beat uniform multi-tenancy.
+
+    Two HEAVY jobs (large dense nets whose GPU time dominates) are present
+    for the whole horizon with arrival rates sized to their SLO-feasible
+    capacity on a ~3/4 device slice: a uniform 1/k time-share physically
+    cannot serve them once a couple of light tenants land on the device.
+    `n_light` LIGHT jobs (tiny mobile/text nets that keep up on an eighth
+    of a device) churn in and out, forcing the placement layer to
+    repeatedly re-divide each device — resizes in partition mode, full
+    kill+relaunch migrations under uniform sharing."""
+    rng = np.random.default_rng(seed)
+    heavy_pool = [j for j in PAPER_JOBS
+                  if j.dnn in ("inception_v4", "resnet_v2_152",
+                               "nasnet_large")]
+    light_pool = [j for j in PAPER_JOBS
+                  if j.dnn in ("mobilenet_v1_025", "mobilenet_v1_05",
+                               "textclassif")]
+    trace: List[ChurnJob] = []
+    for k in range(2):
+        base = heavy_pool[int(rng.integers(len(heavy_pool)))]
+        job = dataclasses.replace(base, job_id=2000 + k)
+        trace.append(ChurnJob(
+            job=job, admit_s=0.0, depart_s=None,
+            arrival_rate=heavy_load * steady_capacity(job, share=0.75)))
+    for k in range(n_light):
+        base = light_pool[int(rng.integers(len(light_pool)))]
+        job = dataclasses.replace(base, job_id=2100 + k)
+        admit = 0.0 if k == 0 else float(rng.uniform(0.0, 0.6 * horizon_s))
+        life = float(rng.exponential(0.35 * horizon_s))
+        depart = admit + life if admit + life < horizon_s else None
+        trace.append(ChurnJob(
+            job=job, admit_s=admit, depart_s=depart,
+            arrival_rate=light_load * steady_capacity(job, share=0.125)))
+    trace.sort(key=lambda e: e.admit_s)
+    return trace
+
+
 def churn_trace(*, horizon_s: float = 150.0, n_initial: int = 4,
                 n_churn: int = 12, mean_lifetime_s: float = 30.0,
                 load: float = 0.6, include_llm: bool = True,

@@ -332,3 +332,39 @@ def test_hybrid_controller_seeds_from_sim_surface():
     # and a changed SLO re-derives the frontier instead of losing it
     ctrl.set_slo(job.slo_s * 0.5)
     assert len(ctrl.scaler._dom_counts) > 0
+
+
+# ---------------------------------------------------------------------------
+# models/layers.py defers its blockwise-attention tile sizes to the cache
+# (ROADMAP autotune follow-up: explicit kwargs win, empty cache falls back).
+# ---------------------------------------------------------------------------
+def test_model_flash_attention_defers_blocks_to_cache(monkeypatch):
+    import jax
+    from repro.models import layers
+    from repro.perf import autotune as at
+
+    calls = []
+
+    def fake_lookup(kernel, dtype, **dims):
+        calls.append((kernel, dims))
+        return {"block_q": 64, "block_k": 64}
+
+    monkeypatch.setattr(at, "lookup", fake_lookup)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 96, 4, 16))
+    k = jax.random.normal(ks[1], (1, 96, 2, 16))
+    v = jax.random.normal(ks[2], (1, 96, 2, 16))
+    out_cached = layers.flash_attention(q, k, v)
+    assert calls and calls[0][0] == "flash_attention"
+    assert calls[0][1]["Tq"] == 96 and calls[0][1]["G"] == 2
+    out_explicit = layers.flash_attention(q, k, v, block_q=64, block_k=64)
+    assert len(calls) == 1        # explicit kwargs never consult the cache
+    np.testing.assert_allclose(np.asarray(out_cached),
+                               np.asarray(out_explicit),
+                               rtol=2e-5, atol=2e-5)
+    # empty cache: the historical 256/512 defaults
+    monkeypatch.setattr(at, "lookup", lambda *a, **kw: None)
+    out_default = layers.flash_attention(q, k, v)
+    out_legacy = layers.flash_attention(q, k, v, block_q=256, block_k=512)
+    np.testing.assert_allclose(np.asarray(out_default),
+                               np.asarray(out_legacy), rtol=1e-6)

@@ -46,6 +46,20 @@ def test_churn_bench_matches_committed_baseline():
 
 
 @pytest.mark.slow
+def test_partition_bench_matches_committed_baseline():
+    """The spatial-partitioning suite is pinned like cluster/churn: its
+    deterministic goodput/thr rows must hold against BENCH_partition.json,
+    and the committed baseline itself must show heterogeneous shares
+    beating the uniform-MTL baseline."""
+    committed = _committed("partition")
+    rows = {r["name"]: _parse_metrics(r["derived"])
+            for r in committed["rows"]}
+    assert (rows["partition/het"]["goodput"]
+            > rows["partition/uniform"]["goodput"])
+    assert check_against(REPO, tol=0.10, only={"partition"}) == 0
+
+
+@pytest.mark.slow
 def test_kernels_bench_matches_committed_baseline(tmp_path):
     """The kernels suite is gated too (closing the 'only cluster/churn
     are pinned' gap): its deterministic pallas-vs-reference `maxerr=`

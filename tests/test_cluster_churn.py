@@ -204,6 +204,76 @@ def test_llm_jobs_serve_in_churn_pool():
 
 
 # ---------------------------------------------------------------------------
+# Lockstep fairness: a wall-clock compile stall charged to one job's
+# sub-millisecond simulated clock starves it in the lockstep loop until
+# every peer catches up.  `stall_cap_s` bounds the per-event clock charge
+# (the excess is recorded, never lost) and therefore the clock divergence.
+# ---------------------------------------------------------------------------
+class _StallingExecutor:
+    """Sim-like executor whose FIRST step reports a huge compile stall
+    (the real-executor AOT-compile regime at wall-clock magnitude)."""
+
+    def __init__(self, lat=0.005, stall=50.0):
+        self.lat = lat
+        self.stall = stall
+        self._first = True
+
+    def run_step(self, bs, mtl):
+        import numpy as np
+        comp = self.stall if self._first else 0.0
+        self._first = False
+        items = bs * mtl
+        return {"step_time": self.lat, "items": items,
+                "compile_time": comp,
+                "request_latencies": np.full(min(items, 64), self.lat),
+                "power_w": 100.0, "throughput": items / self.lat}
+
+
+def _stall_fleet_engine(stall_cap_s):
+    built = []
+
+    def factory(job, spec, share, mesh, seed):
+        # only the FIRST tenancy's serving executor pays the giant stall
+        ex = _StallingExecutor(stall=50.0 if not built else 0.0)
+        built.append(ex)
+        return ex
+
+    trace = [_tenant(0, PAPER_JOBS[0], 0.0, None, 100.0),
+             _tenant(1, PAPER_JOBS[0], 0.0, None, 100.0)]
+    return ClusterEngine([], gpu_fleet(2), churn=trace,
+                         controller_factory=_static_factory(),
+                         executor_factory=factory, seed=0,
+                         stall_cap_s=stall_cap_s, max_queue=2000)
+
+
+def test_uncapped_compile_stall_starves_the_job():
+    eng = _stall_fleet_engine(stall_cap_s=None)
+    eng.run(sim_time_limit=2.0)
+    stalled = eng.states[0]
+    # the 50 s charge threw the clock past the horizon: one step, starved
+    assert len(stalled.acc.trace) == 1
+    assert eng.max_clock_skew_s >= 49.0
+    assert eng.stall_capped_s == 0.0
+
+
+def test_stall_cap_bounds_clock_divergence_and_restores_fairness():
+    cap = 0.5
+    eng = _stall_fleet_engine(stall_cap_s=cap)
+    rep = eng.run(sim_time_limit=2.0)
+    stalled, peer = eng.states[0], eng.states[1]
+    # bounded divergence: no clock ever ran ahead of the slowest active
+    # peer by more than the cap plus one serving step
+    assert eng.max_clock_skew_s <= cap + 0.005 + 1e-9
+    # the capped job serves the horizon instead of starving behind its
+    # stall-inflated clock
+    assert len(stalled.acc.trace) > 100
+    assert len(peer.acc.trace) > 100
+    # the excess was recorded, not lost
+    assert eng.stall_capped_s == pytest.approx(50.0 - cap)
+    _assert_conserved(rep)
+
+
+# ---------------------------------------------------------------------------
 # End-to-end policy comparison (kept small; the converged run lives in
 # examples/cluster_churn.py and the churn bench suite)
 # ---------------------------------------------------------------------------

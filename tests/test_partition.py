@@ -1,0 +1,431 @@
+"""Spatial-partition subsystem tests: plan legality (share/memory sums,
+MIG grid, submesh divisibility), the pricing calibration (uniform spatial
+shares == the paper's MTL curves BIT-identically), the HybridScaler's
+third (share) axis (bounds, throughput-guarded share moves, SLO held at
+convergence, violation escape through share-up), the (bs, mtl, share)
+SurfaceLibrary tensor, and the ClusterEngine partition mode
+(resize-instead-of-migrate, headroom mediation, conservation)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.scaler import HybridScaler
+from repro.serving import device_model as dm
+from repro.serving import partition as pt
+from repro.serving import tenancy
+from repro.serving.cluster import ClusterEngine, gpu_fleet, \
+    run_partition_cluster
+from repro.serving.executor import SimExecutor
+from repro.serving.workload import ChurnJob, PAPER_JOBS, \
+    mixed_partition_trace
+
+DEV = dm.TESLA_P40
+PROF = dm.paper_profile("inception_v1")
+
+
+# ---------------------------------------------------------------------------
+# PartitionPlan legality
+# ---------------------------------------------------------------------------
+def test_mps_plan_legality():
+    assert pt.mps_plan([0.5, 0.25, 0.25]).validate() == []
+    errs = pt.mps_plan([0.75, 0.5]).validate()
+    assert any("sum" in e for e in errs)
+    assert pt.mps_plan([0.5, -0.1]).validate() != []
+    # memory slices are checked independently of compute shares
+    errs = pt.mps_plan([0.5, 0.25], mem_fractions=[0.9, 0.9]).validate()
+    assert any("memory" in e for e in errs)
+
+
+def test_mig_plan_snaps_to_profile_grid():
+    plan = pt.mig_plan([0.5, 0.3, 0.15])
+    assert plan.validate() == []
+    # 0.5 -> 3g (3/7), 0.3 -> 2g, 0.15 -> 1g
+    assert [round(s.share * 7) for s in plan.slices] == [3, 2, 1]
+    # hand-built off-grid share is flagged
+    bad = pt.PartitionPlan(kind="mig", slices=(
+        pt.TenantSlice(share=0.33, tenants=1, isolation=1.0),))
+    assert any("MIG" in e for e in bad.validate())
+
+
+def test_mig_plan_rejects_illegal_combination():
+    with pytest.raises(ValueError):
+        pt.mig_plan([1.0, 1.0])          # two 7g slices cannot coexist
+
+
+def test_submesh_plan_wraps_tenancy_plan():
+    tp = tenancy.plan((4, 4), 4)
+    plan = pt.from_tenancy(tp)
+    assert plan.kind == "submesh" and plan.tenants == 4
+    assert plan.validate() == []
+    assert all(s.isolation == 1.0 for s in plan.slices)
+    assert plan.total_share == pytest.approx(1.0)
+    # a share that is not a whole-chip submesh is illegal
+    bad = pt.PartitionPlan(kind="submesh", slices=(
+        pt.TenantSlice(share=0.3, tenants=1, isolation=1.0),),
+        mesh_shape=(4, 4))
+    assert bad.validate() != []
+
+
+def test_memory_slices_fit_check():
+    plan = pt.mps_plan([0.5, 0.5])
+    profs = [PROF, PROF]
+    assert plan.fits_memory(DEV, profs, [(1, 1), (1, 1)])
+    # a tiny memory slice cannot hold a big batch
+    tiny = pt.mps_plan([0.5, 0.5], mem_fractions=[0.99, 0.01])
+    assert not tiny.fits_memory(DEV, profs, [(1, 1), (128, 4)])
+
+
+def test_share_ladders_and_snap():
+    assert pt.share_ladder("mps") == tuple((k + 1) / 8 for k in range(8))
+    assert all(any(abs(r - c) < 1e-9 for c, _ in pt.MIG_PROFILES)
+               for r in pt.share_ladder("mig"))
+    assert pt.snap("mps", 0.8) == pytest.approx(0.75)
+    assert pt.snap("mig", 0.5) == pytest.approx(3 / 7)
+    assert pt.snap("mps", 0.01) == pytest.approx(0.125)  # floor rung
+
+
+def test_mig_split_for_instances_is_heterogeneous():
+    sl = pt.TenantSlice(share=1.0, inv_share=1.0, tenants=1, isolation=1.0)
+    subs = pt.split_for_instances(sl, 3, kind="mig")
+    assert len(subs) == 3
+    assert sorted(round(s.share * 7) for s in subs) == [2, 2, 3]
+    # the synchronized step is gated by the smallest sub-slice
+    lat = pt.part_instances_latency(DEV, PROF, 4, subs)
+    worst = max(dm.part_latency(DEV, PROF, 4, 1, inv_share=s.inv_share,
+                                tenants=s.tenants, isolation=1.0)
+                for s in subs)
+    assert lat == pytest.approx(worst)
+
+
+# ---------------------------------------------------------------------------
+# Pricing calibration: uniform spatial shares == MTL curves, bit for bit
+# ---------------------------------------------------------------------------
+def test_uniform_partition_pricing_is_bit_identical_to_mtl():
+    bs = np.array([1, 2, 4, 8, 16, 32, 64, 128])
+    for prof in (PROF, dm.paper_profile("mobilenet_v1_05", "caltech"),
+                 dm.paper_profile("textclassif", "sentiment140")):
+        for m in range(1, 11):
+            part = dm.part_latency_grid(DEV, prof, bs, [1],
+                                        inv_share=float(m), tenants=m)
+            mt = dm.mt_latency_grid(DEV, prof, bs, [m])
+            assert np.array_equal(part, mt), (prof.name, m)
+
+
+def test_sole_tenant_partition_equals_mt_grid():
+    bs = np.array([1, 4, 32])
+    mtls = list(range(1, 11))
+    part = dm.part_latency_grid(DEV, PROF, bs, mtls)
+    mt = dm.mt_latency_grid(DEV, PROF, bs, mtls)
+    assert np.array_equal(part, mt)
+
+
+def test_isolation_removes_cross_tenant_interference():
+    shared = dm.part_latency(DEV, PROF, 8, 1, inv_share=2.0, tenants=2,
+                             isolation=0.0)
+    isolated = dm.part_latency(DEV, PROF, 8, 1, inv_share=2.0, tenants=2,
+                               isolation=1.0)
+    assert isolated < shared            # MIG/submesh drops the eps/chi terms
+    # a bigger slice is never slower
+    big = dm.part_latency(DEV, PROF, 8, 1, inv_share=1.0 / 0.75, tenants=2)
+    small = dm.part_latency(DEV, PROF, 8, 1, inv_share=4.0, tenants=2)
+    assert big < small
+
+
+def test_sim_executor_partition_pricing_and_memory():
+    ts = pt.TenantSlice(share=0.5, inv_share=2.0, tenants=2, isolation=0.0)
+    ex = SimExecutor(PROF, device=DEV, partition=ts)
+    assert ex.mean_latency(4, 1) == pytest.approx(
+        dm.part_latency(DEV, PROF, 4, 1, inv_share=2.0, tenants=2))
+    # uniform slice == the MTL=2 curve (the executor-level calibration)
+    assert ex.mean_latency(4, 1) == dm.mt_latency(DEV, PROF, 4, 2)
+    # memory: the tenant only sees its slice
+    whole = SimExecutor(PROF, device=DEV)
+    sliver = SimExecutor(PROF, device=DEV, partition=pt.TenantSlice(
+        share=0.02, mem_fraction=0.02, tenants=2))
+    assert whole.fits(64, 4) and not sliver.fits(64, 4)
+    # resize reprices without a rebuild
+    ex.set_partition(pt.TenantSlice(share=1.0, inv_share=1.0, tenants=2))
+    assert ex.mean_latency(4, 1) == pytest.approx(
+        dm.part_latency(DEV, PROF, 4, 1, inv_share=1.0, tenants=2))
+
+
+# ---------------------------------------------------------------------------
+# 3-D HybridScaler: the share axis
+# ---------------------------------------------------------------------------
+LADDER = (0.25, 0.5, 0.75, 1.0)
+SLO = 0.1
+
+
+def _lat3(bs, mtl, share):
+    """Deterministic multiplicative surface: monotone up in bs/mtl, down
+    in share."""
+    return 0.01 * bs * (1 + 0.5 * (mtl - 1)) / share
+
+
+def _drive(sc, steps=400, demand_cap=None):
+    """Serve the synthetic 3-D surface closed-loop; returns trace of
+    (bs, mtl, share)."""
+    trace = []
+    for _ in range(steps):
+        act = sc.action()
+        share = act.share if act.share is not None else 1.0
+        lat = _lat3(act.bs, act.mtl, share)
+        items = act.bs * act.mtl
+        if demand_cap is not None:
+            # open-loop demand cap: served items per second of serving
+            # cannot exceed the arrival rate, however big the slice
+            items = min(items, demand_cap * lat)
+        trace.append((act.bs, act.mtl, share))
+        sc.observe(lat, {"step_time": lat, "items": items})
+    return trace
+
+
+def test_share_axis_bounds_and_convergence_holds_slo():
+    sc = HybridScaler(SLO, decision_interval=1, share_ladder=LADDER)
+    sc.set_granted_share(0.5)
+    trace = _drive(sc, steps=600)
+    for bs, mtl, share in trace:
+        assert 1 <= bs <= 128 and 1 <= mtl <= 10
+        assert share in LADDER
+    # converged: the point actually served in the tail never violates SLO
+    for bs, mtl, share in trace[-50:]:
+        assert _lat3(bs, mtl, share) <= SLO * 1.01
+    assert not sc.infeasible
+
+
+def test_share_up_is_demand_capped_by_throughput_guard():
+    """A share-up probe that buys no served items (open-loop demand cap)
+    must be reverted and pinned — the throughput-guarded move property."""
+    sc = HybridScaler(SLO, decision_interval=1, share_ladder=LADDER,
+                      max_bs=1, max_mtl=1)   # isolate the share axis
+    sc.set_granted_share(0.5)
+    # demand far below capacity: items/time is flat in share
+    _drive(sc, steps=200, demand_cap=5.0)
+    act = sc.action()
+    # the scaler did not ratchet to max share it cannot use
+    assert act.share <= 0.5 + 1e-9
+
+
+def test_violation_at_floor_escapes_through_share_up():
+    sc = HybridScaler(SLO, decision_interval=1, share_ladder=LADDER,
+                      max_bs=1, max_mtl=1)
+    sc.set_granted_share(0.25)
+    sc.observe(2.0 * SLO)                # gross violation at (1, 1)
+    sc.observe(2.0 * SLO)
+    assert sc.action().share > 0.25      # grew the slice instead of
+    assert not sc.infeasible             # declaring infeasible
+    # infeasible only once the whole ladder is exhausted and (1, 1) at the
+    # full device still violates
+    for _ in range(8):
+        sc.observe(2.0 * SLO)
+    assert sc.infeasible
+    assert sc.action().bs == 1 and sc.action().mtl == 1
+    # at the full device already: infeasible without a ladder escape
+    sc2 = HybridScaler(SLO, decision_interval=1, share_ladder=LADDER,
+                       max_bs=1, max_mtl=1)
+    sc2.set_granted_share(1.0)
+    for _ in range(8):
+        sc2.observe(2.0 * SLO)
+    assert sc2.infeasible
+
+
+def test_share_cap_bounds_requests():
+    sc = HybridScaler(SLO, decision_interval=1, share_ladder=LADDER,
+                      max_bs=1, max_mtl=1)
+    sc.set_granted_share(0.25)
+    sc.set_share_cap(0.5)
+    for _ in range(400):
+        sc.observe(2.0 * SLO)            # always begging for more
+        assert sc.action().share <= 0.5 + 1e-9
+
+
+def test_dominance_pins_extend_down_the_share_axis():
+    sc = HybridScaler(SLO, decision_interval=1, share_ladder=LADDER)
+    sc.set_granted_share(1.0)            # rung 3
+    sc._dom_counts[(8, 2, 2)] = sc.persist_pins   # failed at share 0.75
+    # same work at a SMALLER share is dominated ...
+    assert sc.is_pinned(8, 2, si=1) and sc.is_pinned(16, 3, si=0)
+    # ... but a larger share is not
+    assert not sc.is_pinned(8, 2, si=3)
+
+
+def test_no_ladder_keeps_scaler_exactly_2d():
+    sc = HybridScaler(SLO, decision_interval=1)
+    assert sc.action().share is None
+    sc.set_granted_share(0.5)            # no-ops without a ladder
+    sc.set_share_cap(0.25)
+    assert sc.action().share is None
+
+
+# ---------------------------------------------------------------------------
+# SurfaceLibrary: the (bs, mtl, share) tensor
+# ---------------------------------------------------------------------------
+def test_surface_library_share_tensor_roundtrip_and_predict():
+    from repro.core.matrix_completion import SurfaceLibrary
+    shares = (1.0, 0.5, 0.25)
+    lib = SurfaceLibrary(bs_values=(1, 2, 4, 8), max_mtl=4,
+                         share_values=shares)
+    assert lib.shape == (4, 4, 3)
+
+    def lat(b, m, s, base=5.0):
+        return base * (1 + 0.3 * (b - 1)) * (1 + 0.5 * (m - 1)) / s / 1e3
+
+    for b in (1, 2, 4, 8):
+        for m in range(1, 5):
+            for s in shares:
+                lib.observe("historic", b, m, lat(b, m, s, 7.0), share=s)
+    for b, m, s in ((1, 1, 1.0), (4, 1, 1.0), (1, 2, 0.5), (2, 1, 0.25)):
+        lib.observe("new", b, m, lat(b, m, s), share=s)
+    full = lib.predict("new")
+    assert full is not None and full[0].shape == (4, 4, 3)
+    est, support = lib.predict("new", share=0.5)
+    assert est.shape == (4, 4)
+    truth = np.array([[lat(b, m, 0.5) for m in range(1, 5)]
+                      for b in (1, 2, 4, 8)])
+    rel = np.abs(est - truth) / truth
+    assert float(np.median(rel)) < 0.2
+    # off-grid share observations are dropped, like off-grid bs
+    before = lib.n_points("new")
+    lib.observe("new", 1, 1, 0.005, share=0.33)
+    assert lib.n_points("new") == before
+
+
+def test_surface_library_share_row_persists_through_store(tmp_path):
+    from repro.core.matrix_completion import SurfaceLibrary
+    from repro.perf.profile_store import ProfileStore
+    shares = (1.0, 0.5)
+    lib = SurfaceLibrary(bs_values=(1, 2, 4), max_mtl=3,
+                         share_values=shares)
+    for b in (1, 2, 4):
+        for m in (1, 2, 3):
+            for s in shares:
+                lib.observe("t", b, m, 0.004 * b * m / s, share=s)
+    store = ProfileStore(str(tmp_path))
+    assert store.persist_surface(lib, "t", signature="net/x",
+                                 device_class="gpu", tile_dependent=False)
+    store.save()
+    lib2 = SurfaceLibrary(bs_values=(1, 2, 4), max_mtl=3,
+                          share_values=shares)
+    res = ProfileStore(str(tmp_path)).load_surfaces(
+        lib2, device_class="gpu", validate=False)
+    assert len(res["loaded"]) == 1 and not res["evicted"]
+    assert lib2.n_points(("hist", "net/x", "gpu")) == 18
+    # a 2-D library refuses the 3-D record (grid mismatch -> eviction)
+    lib_2d = SurfaceLibrary(bs_values=(1, 2, 4), max_mtl=3)
+    res = ProfileStore(str(tmp_path)).load_surfaces(
+        lib_2d, device_class="gpu", validate=False)
+    assert len(res["evicted"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# ClusterEngine partition mode
+# ---------------------------------------------------------------------------
+def _static_factory(bs=1, mtl=1):
+    from repro.core.controller import StaticController
+    return lambda job, executor: StaticController(bs=bs, mtl=mtl)
+
+
+def _tenant(k, base, admit, depart, rate):
+    return ChurnJob(job=dataclasses.replace(base, job_id=700 + k),
+                    admit_s=admit, depart_s=depart, arrival_rate=rate)
+
+
+def test_partition_uniform_grants_price_like_mtl():
+    """Two tenants on one MPS device: each executor's pricing equals the
+    paper's MTL=2 curve — the engine-level face of the calibration."""
+    trace = [_tenant(0, PAPER_JOBS[2], 0.0, None, None),
+             _tenant(1, PAPER_JOBS[2], 0.0, None, None)]
+    eng = ClusterEngine([], gpu_fleet(1), churn=trace,
+                        controller_factory=_static_factory(),
+                        partition="mps", seed=0)
+    prof = PAPER_JOBS[2].profile()
+    for st in eng.states:
+        assert st.executor.mean_latency(4, 1) == pytest.approx(
+            dm.mt_latency(dm.TESLA_P40, prof, 4, 2))
+    assert eng.partition_plan(0).validate() == []
+
+
+def test_partition_admission_resizes_instead_of_migrating():
+    """Churn on a full device: the partition path absorbs every share
+    change with cheap resizes — zero kill+relaunch migrations — and the
+    recorded equivalent-migration cost strictly exceeds what was paid."""
+    base = PAPER_JOBS[2]
+    trace = [_tenant(k, base, 0.0 if k < 4 else 3.0,
+                     6.0 if k == 1 else None, 50.0)
+             for k in range(5)]
+    eng = ClusterEngine([], gpu_fleet(1), churn=trace,
+                        controller_factory=_static_factory(),
+                        partition="mps", seed=0, max_queue=500)
+    rep = eng.run(sim_time_limit=15.0)
+    agg = rep["aggregate"]
+    assert agg["conserved"]
+    assert agg["migrations"] == 0
+    assert agg["resizes"] > 0
+    assert agg["resize_stall_s"] < agg["resize_equiv_migration_stall_s"]
+    # legality holds after all the churn
+    for d in range(len(eng.fleet)):
+        assert eng.partition_plan(d).validate() == []
+        assert eng._headroom(d) >= -pt.SHARE_TOL
+
+
+def test_partition_mig_grants_stay_on_grid():
+    trace = [_tenant(k, PAPER_JOBS[2], 0.0, None, None) for k in range(3)]
+    eng = ClusterEngine([], gpu_fleet(1), churn=trace,
+                        controller_factory=_static_factory(),
+                        partition="mig", seed=0)
+    eng.run(sim_time_limit=5.0)
+    for j in eng.residents[0]:
+        share = eng._grant[j]
+        assert any(abs(share - c) < 1e-9 for c, _ in pt.MIG_PROFILES)
+    assert eng.partition_plan(0).validate() == []
+
+
+def test_mig_admission_never_oversubscribes_the_device():
+    """Regression: floor-sized MIG residents cannot shrink, so piling
+    tenants onto one device used to push the share sum past 1.  Now
+    residents step down the profile grid, and once the tenant count
+    outgrows the grid the device explicitly falls back to
+    time-multiplexed 1/k shares (reported as a legal 'mps' plan)."""
+    trace = [_tenant(k, PAPER_JOBS[2], 0.0 if k < 2 else 0.5 + 0.1 * k,
+                     None, None) for k in range(9)]
+    eng = ClusterEngine([], gpu_fleet(1), churn=trace,
+                        controller_factory=_static_factory(),
+                        partition="mig", seed=0)
+    eng.run(sim_time_limit=6.0)
+    plan = eng.partition_plan(0)
+    assert plan.total_share <= 1.0 + pt.SHARE_TOL
+    assert plan.validate() == []
+    assert 0 in eng._timeshared          # 9 tenants > 7 compute slices
+    assert plan.kind == "mps"            # reported as time-multiplexed
+    # grants really are the equal time-share
+    shares = {round(eng._grant[j], 6) for j in eng.residents[0]}
+    assert shares == {round(1.0 / 9, 6)}
+
+
+def test_off_ladder_grant_does_not_trigger_snapback_resizes():
+    """Regression: a 1/3 grant is off the eighths ladder; the scaler used
+    to snap its report down to 0.25 and the engine read the difference as
+    a shrink request, charging an unrequested resize on the next step."""
+    from repro.serving.cluster import paper_controller_factory
+    trace = [_tenant(k, PAPER_JOBS[2], 0.0, None, 10.0) for k in range(3)]
+    eng = ClusterEngine([], gpu_fleet(1), churn=trace,
+                        controller_factory=paper_controller_factory(
+                            "hybrid", share_ladder=pt.MPS_LADDER),
+                        partition="mps", seed=0, max_queue=200)
+    eng.run(sim_time_limit=2.0)
+    # no job hands back its 1/3 grant unprompted in the first steps
+    assert not any(kind == "resize" and t < 0.5
+                   for t, kind, _, _ in eng.churn_log)
+    """The acceptance bar, at test scale: same trace, same pricing model,
+    heterogeneous shares + resizes vs uniform 1/k + migrations."""
+    trace = mixed_partition_trace(horizon_s=120.0, n_light=5, seed=1)
+    kw = dict(trace=list(trace), n_devices=2, horizon_s=120.0, seed=1)
+    uni = run_partition_cluster("uniform", **kw)
+    het = run_partition_cluster("het", **kw)
+    assert uni["aggregate"]["conserved"] and het["aggregate"]["conserved"]
+    assert (het["aggregate"]["goodput"] > uni["aggregate"]["goodput"])
+    assert het["aggregate"]["migrations"] == 0
+    assert (het["aggregate"]["resize_stall_s"]
+            < het["aggregate"]["resize_equiv_migration_stall_s"])
