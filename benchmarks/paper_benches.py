@@ -266,7 +266,8 @@ def bench_churn():
                      f"thr={a['aggregate_throughput']:.1f}/s,"
                      f"migs={a['migrations']},"
                      f"mig_stall={a['migration_stall_s']:.1f}s,"
-                     f"conserved={'yes' if conserved else 'NO'}"))
+                     f"conserved={'yes' if conserved else 'NO'}"
+                     + (",truncated=1" if a.get("truncated") else "")))
     rows.append(("churn/dynamic_vs_union", 0.0,
                  f"x{goodput['dynamic'] / max(goodput['union'], 1e-9):.2f}"))
     rows.append(("churn/surface_vs_union", 0.0,
@@ -315,7 +316,8 @@ def bench_partition():
                      f"resize_stall={a['resize_stall_s']:.2f}s,"
                      f"migs={a['migrations']},"
                      f"mig_stall={a['migration_stall_s']:.1f}s,"
-                     f"conserved={'yes' if a['conserved'] else 'NO'}"))
+                     f"conserved={'yes' if a['conserved'] else 'NO'}"
+                     + (",truncated=1" if a.get("truncated") else "")))
     rows.append(("partition/het_vs_uniform", 0.0,
                  f"x{goodput['het'] / max(goodput['uniform'], 1e-9):.2f}"))
     return rows
@@ -416,7 +418,8 @@ def bench_cluster():
         rows.append((f"cluster/slice12/{mode}", 0.0,
                      f"thr={a['aggregate_throughput']:.1f}/s,"
                      f"meet_slo={a['jobs_meeting_slo']}/{a['feasible_jobs']},"
-                     f"stall={a['total_stall_s']:.1f}s"))
+                     f"stall={a['total_stall_s']:.1f}s"
+                     + (",truncated=1" if a.get("truncated") else "")))
     best_pure = max(thr["auto"], thr["B"], thr["MT"])
     rows.append(("cluster/slice12/hybrid_vs_best_pure", 0.0,
                  f"x{thr['hybrid'] / max(best_pure, 1e-9):.2f}"))
@@ -429,7 +432,8 @@ def bench_cluster():
         rows.append((f"cluster/full30/{mode}", 0.0,
                      f"thr={a['aggregate_throughput']:.1f}/s,"
                      f"meet_slo={a['jobs_meeting_slo']}/{a['feasible_jobs']},"
-                     f"stall={a['total_stall_s']:.1f}s"))
+                     f"stall={a['total_stall_s']:.1f}s"
+                     + (",truncated=1" if a.get("truncated") else "")))
     rows.append(("cluster/full30/hybrid_vs_paper", 0.0,
                  f"x{full['hybrid'] / max(full['auto'], 1e-9):.2f}"))
     return rows

@@ -31,6 +31,8 @@ Suites (one per paper table/figure — DESIGN.md §8):
   churn         online admit/drain churn: union vs dynamic vs shared surface
   partition     spatial partition sharing: uniform vs heterogeneous shares
   burst         open-loop bursty arrivals: DNNScaler vs static (beyond paper)
+  sim           fleet-scale simulator: vectorized engine vs object reference
+                at 1000 jobs x 1000 devices (gated on the speedup ratio)
   alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
   matcomp       ablation: matrix completion vs naive interpolation
   kernels       Pallas kernel micro-benches (interpret mode)
@@ -50,7 +52,8 @@ import time
 
 
 def suites():
-    from benchmarks import kernel_benches, paper_benches, roofline_bench
+    from benchmarks import (kernel_benches, paper_benches, roofline_bench,
+                            sim_benches)
     return {
         "fig1": paper_benches.bench_fig1_sweeps,
         "table5": paper_benches.bench_table5_profiler,
@@ -68,6 +71,7 @@ def suites():
         "alpha": paper_benches.bench_alpha_ablation,
         "matcomp": paper_benches.bench_matrix_completion_ablation,
         "matcomp_nl": paper_benches.bench_matcomp_nonlinear,
+        "sim": sim_benches.bench_sim,
         "kernels": kernel_benches.bench_kernels,
         "real_decode": kernel_benches.bench_real_decode,
         "roofline": roofline_bench.bench_roofline,
@@ -97,8 +101,10 @@ def _autotune_delta(before: dict, after: dict) -> dict:
 
 
 # metrics gated by --check: simulated-time results, deterministic per seed
-# (wall-clock us_per_call rows are informational only — too noisy to gate)
-_CHECKED_METRICS = ("thr", "goodput")
+# (wall-clock us_per_call rows are informational only — too noisy to gate).
+# "speedup" is the sim suite's vector/object steps-per-second ratio, pinned
+# capped (see sim_benches) so the gate floor stays above the 20x contract.
+_CHECKED_METRICS = ("thr", "goodput", "speedup")
 
 # lower-is-better gated metrics: numeric-accuracy rows (the kernels suite's
 # pallas-vs-reference max abs error).  These are deterministic per seed on
@@ -149,6 +155,13 @@ def check_against(base_dir: str, *, tol: float = 0.10,
             continue
         fresh = {name: _parse_metrics(derived)
                  for name, _, derived in fresh_rows}
+        for name, metrics in fresh.items():
+            # a truncated engine run means the row's metrics cover a
+            # partial horizon — never comparable, always a failure
+            if metrics.get("truncated"):
+                print(f"CHECK {suite}: TRUNCATED row {name} "
+                      f"(hit max_steps before the simulated horizon)")
+                regressions += 1
         for row in committed.get("rows", []):
             base = _parse_metrics(row.get("derived", ""))
             got = fresh.get(row["name"])

@@ -218,8 +218,26 @@ def main() -> None:
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="cross-run profile store dir to summarize "
                          "(perf.profile_store)")
+    ap.add_argument("--replay", default=None, metavar="NAME",
+                    help="what-if analysis of a run recorded with "
+                         "`serve --record NAME`: re-drive the trace under "
+                         "counterfactual policies (uniform MTL, MIG'd "
+                         "fleet, 20%% fewer devices) and print the diff "
+                         "table")
     ap.add_argument("--out", default="experiments/roofline_tables.md")
     args = ap.parse_args()
+
+    if args.replay:
+        from repro.perf.profile_store import store_for
+        from repro.serving import replay as rp
+        store = store_for(args.store)   # None -> $REPRO_PROFILE_STORE
+        trace = rp.load_trace(store, args.replay)
+        meta = trace["init"].get("meta", {})
+        print(f"replay of {args.replay!r} "
+              f"(entry={meta.get('entry', '?')}, "
+              f"{trace['event_count']} recorded events):\n")
+        print(rp.diff_table(rp.replay_diff(trace)))
+        return
 
     base = load_dir(args.baseline)
     final = load_dir(args.final)

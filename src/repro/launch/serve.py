@@ -128,6 +128,14 @@ def main() -> None:
                          "surface rows / migration calibrations before "
                          "serving and persist this run's probing "
                          "afterwards (warm start; see perf.profile_store)")
+    ap.add_argument("--record", default=None, metavar="NAME",
+                    help="record this cluster/churn/partition run's inputs "
+                         "and event stream into the profile store under "
+                         "NAME, for later `report --replay NAME` what-if "
+                         "analysis")
+    ap.add_argument("--vectorized", action="store_true",
+                    help="use the array-backed VectorClusterEngine "
+                         "(bit-identical results, faster at fleet scale)")
     args = ap.parse_args()
 
     from repro.perf import autotune
@@ -144,6 +152,17 @@ def main() -> None:
             # must come from the SAME document the rows live in
             autotune.configure(cache_dir=args.profile_store)
 
+    if args.record and not (args.cluster or args.churn or args.partition):
+        ap.error("--record applies to --cluster / --churn / --partition "
+                 "runs only")
+
+    def warn_truncated(agg: dict) -> None:
+        # satellite of the max_steps bugfix: a truncated run used to look
+        # like a finished one; now the aggregate says so and we warn
+        if agg.get("truncated"):
+            print("WARNING: run truncated at max_steps — metrics cover a "
+                  "partial horizon, not the full simulated window")
+
     if args.partition:
         from repro.serving.cluster import run_partition_cluster
         if args.controller not in ("dnnscaler", "hybrid"):
@@ -152,8 +171,11 @@ def main() -> None:
         rep = run_partition_cluster(args.partition_policy, mode=mode,
                                     n_devices=args.devices or 3,
                                     horizon_s=args.seconds or 120.0,
-                                    seed=args.seed, profile_store=store)
+                                    seed=args.seed, profile_store=store,
+                                    vectorized=args.vectorized,
+                                    record=args.record, record_store=store)
         agg = rep["aggregate"]
+        warn_truncated(agg)
         assert agg["conserved"], "request conservation violated"
         print(f"partition[{args.partition_policy}/{mode}]: {agg['jobs']} "
               f"tenancies on {agg['devices']} devices "
@@ -180,8 +202,11 @@ def main() -> None:
         rep = run_churn_cluster(args.churn_policy, mode=mode,
                                 n_devices=args.devices or 5,
                                 horizon_s=args.seconds or 150.0,
-                                seed=args.seed, profile_store=store)
+                                seed=args.seed, profile_store=store,
+                                vectorized=args.vectorized,
+                                record=args.record, record_store=store)
         agg = rep["aggregate"]
+        warn_truncated(agg)
         assert agg["conserved"], "request conservation violated"
         print(f"churn[{args.churn_policy}/{mode}]: {agg['jobs']} tenancies "
               f"on {agg['devices']} devices — goodput {agg['goodput']:.1f}"
@@ -220,8 +245,10 @@ def main() -> None:
                 "clipper": "clipper"}[args.controller]
         rep = run_paper_cluster(mode, n_devices=args.devices or 12,
                                 sim_time_limit=args.seconds or 90.0,
-                                seed=args.seed)
+                                seed=args.seed, vectorized=args.vectorized,
+                                record=args.record, record_store=store)
         agg = rep["aggregate"]
+        warn_truncated(agg)
         print(f"cluster[{mode}]: {agg['jobs']} jobs on {agg['devices']} "
               f"devices — aggregate {agg['aggregate_throughput']:.1f} "
               f"items/s, {agg['jobs_meeting_slo']}/{agg['feasible_jobs']} "

@@ -137,6 +137,16 @@ class ProfileStore:
         self.section(section).pop(key, None)
         self._deleted.add((section, key))
 
+    # -- recorded run traces (serving.replay) --------------------------------
+    def record_trace(self, name: str, trace: dict) -> None:
+        """Persist a recorded run trace (one key per run name)."""
+        self.put("traces", name, trace)
+        self.save()
+
+    def get_trace(self, name: str):
+        rec = self.get("traces", name)
+        return rec if isinstance(rec, dict) else None
+
     def generation(self, name: str = "autotune") -> int:
         gens = self.load().setdefault("generations", {})
         try:

@@ -84,6 +84,7 @@ from repro.serving import tenancy
 from repro.serving.engine import Action, OpenLoopQueue, reconfig_stall
 from repro.serving.executor import SimExecutor
 from repro.serving.metrics import RunAccumulator, TailLatencyWindow
+from repro.serving.sim_state import SimState
 from repro.serving.workload import ChurnJob
 
 PLACEMENT_ALPHA = 0.85   # the scalers' hysteresis floor (paper alpha)
@@ -163,46 +164,84 @@ def place(jobs: Sequence, fleet: Sequence[DeviceSpec], *,
     return assign
 
 
-class _JobState:
-    """Per-job serving state inside the cluster (one controller each)."""
+def _scalar_prop(field: str, cast) -> property:
+    """Array-backed scalar attribute: `_JobState.<field>` reads and writes
+    its slot in the engine's `SimState` arrays.  Reads return a plain
+    Python scalar, so every downstream arithmetic expression is
+    bit-identical to the old object-attribute code."""
 
-    def __init__(self, job, controller, executor, *, window: int,
-                 arrival_rate: Optional[float], max_queue: int, seed: int,
-                 admit_s: float = 0.0, depart_s: Optional[float] = None):
+    def fget(self):
+        return cast(getattr(self.sim, field)[self.idx])
+
+    def fset(self, v):
+        getattr(self.sim, field)[self.idx] = v
+
+    return property(fget, fset)
+
+
+class _JobState:
+    """Per-job serving state inside the cluster (one controller each).
+
+    Scalar fields live in the engine's `SimState` structure-of-arrays
+    (serving/sim_state.py) so the event loop, admission scan, and skew
+    scan can query the whole fleet without walking Python objects; this
+    object keeps the unvectorizable parts — controller, executor, tail
+    window, accumulator, open-loop queue.  Semantics carried over:
+    ``arrival_mark`` is where arrivals were last sampled up to, kept
+    separate from the clock so stalls charged between steps (migrations)
+    never swallow an arrival window; ``epoch`` bumps whenever the clock
+    moves outside a step (the stale-heap guard); ``migration_modeled_s``
+    is what the modeling defaults would have charged (vs the calibrated
+    stalls actually charged); ``measured_migration_s`` is instrumented
+    kill+relaunch wall time."""
+
+    clock = _scalar_prop("clock", float)
+    arrival_mark = _scalar_prop("arrival_mark", float)
+    admit_s = _scalar_prop("admit_s", float)
+    stall_time = _scalar_prop("stall_time", float)
+    migration_stall_s = _scalar_prop("migration_stall_s", float)
+    migration_modeled_s = _scalar_prop("migration_modeled_s", float)
+    measured_migration_s = _scalar_prop("measured_migration_s", float)
+    resize_stall_s = _scalar_prop("resize_stall_s", float)
+    epoch = _scalar_prop("epoch", int)
+    migrations = _scalar_prop("migrations", int)
+    resizes = _scalar_prop("resizes", int)       # partition share changes
+    submitted = _scalar_prop("submitted", int)   # closed-loop accounting
+    completed = _scalar_prop("completed", int)
+    active = _scalar_prop("active", bool)
+
+    def __init__(self, job, controller, executor, *, sim: SimState,
+                 window: int, arrival_rate: Optional[float], max_queue: int,
+                 seed: int, admit_s: float = 0.0,
+                 depart_s: Optional[float] = None):
         self.job = job
         self.controller = controller
         self.executor = executor
         self.window = TailLatencyWindow(window=window)
         self.acc = RunAccumulator()
-        self.clock = admit_s
-        self.arrival_mark = admit_s    # arrivals sampled up to here — kept
-        #                                separate from the clock so stalls
-        #                                charged between steps (migrations)
-        #                                never swallow an arrival window
-        self.admit_s = admit_s
-        self.depart_s = depart_s
-        self.active = True
-        self.drained_at: Optional[float] = None
-        self.epoch = 0                 # bumped whenever the clock is moved
-        #                                outside a step (stale-heap guard)
-        self.migrations = 0
-        self.migration_stall_s = 0.0
-        self.migration_modeled_s = 0.0  # what the modeling defaults would
-        #                                 have charged (vs the calibrated
-        #                                 stalls actually charged)
-        self.measured_migration_s = 0.0  # instrumented kill+relaunch wall
-        self.resizes = 0                 # partition-mode share changes
-        self.resize_stall_s = 0.0
+        self.sim = sim
+        self.idx = sim.add_job(admit_s=admit_s, depart_s=depart_s)
         self.prev = Action(bs=1, mtl=1)
-        self.stall_time = 0.0
         self.arrival_rate = arrival_rate
         # open-loop mechanics (arrival window, overflow, conservation) are
         # the shared OpenLoopQueue helper — same code path as OpenLoopEngine
         self.oq = (OpenLoopQueue(lambda t, r=arrival_rate: r,
                                  max_queue=max_queue, seed=seed)
                    if arrival_rate is not None else None)
-        self.submitted = 0                # closed-loop accounting
-        self.completed = 0
+
+    @property
+    def depart_s(self) -> Optional[float]:
+        v = self.sim.depart_s[self.idx]
+        return None if np.isinf(v) else float(v)
+
+    @property
+    def drained_at(self) -> Optional[float]:
+        v = self.sim.drained_at[self.idx]
+        return None if np.isnan(v) else float(v)
+
+    @drained_at.setter
+    def drained_at(self, v: float) -> None:
+        self.sim.drained_at[self.idx] = v
 
     @property
     def queue(self) -> list:
@@ -224,9 +263,28 @@ class ClusterEngine:
                  profile_store=None, partition: Optional[str] = None,
                  partition_resize_s: float = PART_RESIZE_S,
                  partition_uniform: bool = False,
-                 stall_cap_s: Optional[float] = None):
+                 stall_cap_s: Optional[float] = None,
+                 record: Optional[str] = None, record_store=None,
+                 record_meta: Optional[dict] = None):
         if partition not in (None, "mps", "mig"):
             raise ValueError(f"unknown partition kind {partition!r}")
+        # trace recording (serving/replay.py): capture the construction
+        # inputs verbatim BEFORE any munging, so `replay_run` can re-drive
+        # the identical scenario under counterfactual policies
+        self.record = record
+        self._record_store = record_store
+        if record is not None:
+            from repro.serving import replay as _replay
+            self._record_init = _replay.serialize_init(
+                jobs=jobs, churn=churn, fleet=fleet, window=window,
+                instance_launch_s=instance_launch_s,
+                instance_kill_s=instance_kill_s,
+                arrival_rates=arrival_rates, max_queue=max_queue,
+                seed=seed, static_union=static_union, anticipate=anticipate,
+                ckpt_bps=ckpt_bps, partition=partition,
+                partition_resize_s=partition_resize_s,
+                partition_uniform=partition_uniform,
+                stall_cap_s=stall_cap_s, meta=record_meta)
         self.partition = partition
         self.partition_resize_s = partition_resize_s
         # the uniform-MTL baseline under the SAME spatial pricing model:
@@ -292,13 +350,21 @@ class ClusterEngine:
         self._horizon = float("inf")
         self._heap: Optional[list] = None
         self._steady_cache: dict = {}     # (job_id, d, k) -> analytic grid
+        self._feas_cache: dict = {}       # feasibility-snapshot memo
         self.event_log: list = []         # (global time, job_id) pop order
         self.churn_log: list = []         # (time, kind, job_id, device)
+        self._sim = SimState()            # per-job scalar state arrays
+        self.truncated = False            # last run hit max_steps with
+        #                                   simulated work still remaining
+        self.steps_run = 0                # serving steps of the last run
 
         churn = sorted(churn or [], key=lambda e: e.admit_s)
         entries = ([ChurnJob(job=j) for j in jobs]
                    + [e for e in churn if e.admit_s <= 0.0])
         self._pending: List[ChurnJob] = [e for e in churn if e.admit_s > 0.0]
+        self._pending_i = 0               # admission cursor (the pending
+        #                                   list is consumed in admit order;
+        #                                   no O(n^2) pop-from-front)
         if static_union:
             # the baseline: shares fixed over the union of every tenancy
             # that EVER appears — late arrivals hold their slice from t=0
@@ -448,10 +514,12 @@ class ClusterEngine:
             controller.note_share_grant(share)
         rate = (entry.arrival_rate if entry.arrival_rate is not None
                 else self._arrival_rates.get(job.job_id))
-        st = _JobState(job, controller, serving_ex, window=self.window_size,
+        st = _JobState(job, controller, serving_ex, sim=self._sim,
+                       window=self.window_size,
                        arrival_rate=rate, max_queue=self.max_queue,
                        seed=self.seed + 2000 + i, admit_s=entry.admit_s,
                        depart_s=entry.depart_s)
+        assert st.idx == i               # state index == SimState slot
         self.states.append(st)
         self.placement.append(d)
         if len(self.jobs) < len(self.states):
@@ -1270,6 +1338,70 @@ class ClusterEngine:
         st.clock = t1
         st.arrival_mark = t1
         st.prev = act
+        # snapshot SLO feasibility AT SERVE TIME: report() must describe
+        # the share this job actually served under, not whoever lives on
+        # its device at the horizon
+        self._sim.feasible_at_serve[i] = 1 if self._feasible_now(i) else 0
+
+    def _feasible_now(self, i: int) -> bool:
+        """SLO feasibility of state i's CURRENT slice — the same (bs=1,
+        mtl=1) pricing `report()` uses — memoized on (device, resident
+        count, grant), which fully determines it."""
+        d = self.placement[i]
+        k = max(len(self.residents[d]) + (0 if i in self.residents[d]
+                                          else 1), 1)
+        st = self.states[i]
+        if self.partition is not None and self._grant.get(i):
+            ck = (i, d, k, self._grant[i], d in self._timeshared)
+            v = self._feas_cache.get(ck)
+            if v is None:
+                ts = self._tenant_slice(self._grant[i], k, d)
+                base = dm.part_latency(self.fleet[d].device,
+                                       st.job.profile(), 1, 1,
+                                       inv_share=ts.inv_share,
+                                       tenants=ts.tenants,
+                                       isolation=ts.isolation)
+                v = bool(base <= st.job.slo_s)
+                self._feas_cache[ck] = v
+            return v
+        ck = (i, d, k)
+        v = self._feas_cache.get(ck)
+        if v is None:
+            base = _base_latency(self.fleet[d], st.job.profile(), k)
+            v = bool(base <= st.job.slo_s)
+            self._feas_cache[ck] = v
+        return v
+
+    def _admissions_due(self, nxt: float, sim_time_limit: float) -> bool:
+        """Pending arrivals due before the next step event (cursor-based:
+        the pending list is consumed in admit order, never popped)."""
+        if self._pending_i >= len(self._pending):
+            return False
+        due = self._pending[self._pending_i].admit_s
+        return due <= min(nxt, sim_time_limit) and due < sim_time_limit
+
+    def _note_skew(self, st: _JobState, i: int) -> None:
+        """Lockstep divergence: how far this job's clock ran ahead of the
+        slowest active peer (a stall-inflated clock starves in the
+        lockstep loop until everyone catches up — `stall_cap_s` bounds
+        it).  Only a stall moves the clock by more than one serving step,
+        so this runs only then; the min is one vectorized reduction over
+        the state arrays, not a Python list rebuild."""
+        other = self._sim.min_other_active_clock(i)
+        if np.isfinite(other):
+            self.max_clock_skew_s = max(self.max_clock_skew_s,
+                                        st.clock - other)
+
+    def _work_remaining(self, sim_time_limit: float) -> bool:
+        """Any active job still short of the horizon, or any unadmitted
+        arrival due before it — the condition that turns a max_steps exit
+        into a TRUNCATED (silently partial) run."""
+        n = len(self._sim)
+        clocks = self._sim.clock[:n]
+        if bool(np.any(self._sim.active[:n] & (clocks < sim_time_limit))):
+            return True
+        return (self._pending_i < len(self._pending)
+                and self._pending[self._pending_i].admit_s < sim_time_limit)
 
     def run(self, *, sim_time_limit: float = 120.0,
             max_steps: int = 500_000) -> dict:
@@ -1282,10 +1414,9 @@ class ClusterEngine:
         while steps < max_steps:
             nxt = heap[0][0] if heap else float("inf")
             # admissions due before the next step event re-run the packer
-            while (self._pending
-                   and self._pending[0].admit_s <= min(nxt, sim_time_limit)
-                   and self._pending[0].admit_s < sim_time_limit):
-                i = self._admit(self._pending.pop(0))
+            while self._admissions_due(nxt, sim_time_limit):
+                i = self._admit(self._pending[self._pending_i])
+                self._pending_i += 1
                 st = self.states[i]
                 heapq.heappush(heap, (st.clock, i, st.epoch))
                 nxt = heap[0][0]
@@ -1302,22 +1433,37 @@ class ClusterEngine:
             self._step(st, i)
             steps += 1
             if st.stall_time + st.acc.compile_stall_s > stalls_before:
-                # lockstep divergence: how far this job's clock ran ahead
-                # of the slowest active peer (a stall-inflated clock
-                # starves here until everyone catches up — `stall_cap_s`
-                # bounds it).  Only a stall moves the clock by more than
-                # one serving step, so the O(jobs) scan runs only then.
-                others = [s.clock for s in self.states
-                          if s.active and s is not st]
-                if others:
-                    self.max_clock_skew_s = max(self.max_clock_skew_s,
-                                                st.clock - min(others))
+                self._note_skew(st, i)
             if self._maybe_drain(i):
                 continue
             heapq.heappush(heap, (st.clock, i, st.epoch))
         self._heap = None
+        self.steps_run = steps
+        self.truncated = bool(steps >= max_steps
+                              and self._work_remaining(sim_time_limit))
         self._persist_profiles()
-        return self.report()
+        rep = self.report()
+        self._record_run(rep, sim_time_limit=sim_time_limit,
+                         max_steps=max_steps)
+        return rep
+
+    def _record_run(self, rep: dict, *, sim_time_limit: float,
+                    max_steps: int) -> None:
+        """Trace recording: persist the construction inputs, the
+        admission/migration/resize/drain event stream, and the achieved
+        aggregate into the profile store (serving/replay.py re-drives
+        them under counterfactual policies)."""
+        if self.record is None:
+            return
+        from repro.serving import replay as _replay
+        store = self._record_store or self.profile_store
+        if store is None:
+            from repro.perf.profile_store import store_for
+            store = store_for()
+        trace = _replay.trace_from_engine(self, rep,
+                                          sim_time_limit=sim_time_limit,
+                                          max_steps=max_steps)
+        _replay.save_trace(store, self.record, trace)
 
     def report(self) -> dict:
         per_job = []
@@ -1326,18 +1472,14 @@ class ClusterEngine:
             s = st.acc.summary()
             # a job is SLO-feasible on its slice iff even (bs=1, mtl=1)
             # fits under the SLO there; infeasible jobs are served
-            # best-effort and flagged, not hidden
-            k = len(self.residents[d]) + (0 if i in self.residents[d] else 1)
-            if self.partition is not None and self._grant.get(i):
-                ts = self._tenant_slice(self._grant[i], max(k, 1), d)
-                base = dm.part_latency(self.fleet[d].device,
-                                       st.job.profile(), 1, 1,
-                                       inv_share=ts.inv_share,
-                                       tenants=ts.tenants,
-                                       isolation=ts.isolation)
-            else:
-                base = _base_latency(self.fleet[d], st.job.profile(),
-                                     max(k, 1))
+            # best-effort and flagged, not hidden.  The flag is the
+            # snapshot taken at the job's LAST SERVE — the share it
+            # actually ran under — not a recomputation from whoever lives
+            # on the device at the horizon; only a job that never served
+            # falls back to the current-slice computation.
+            snap = int(self._sim.feasible_at_serve[i])
+            feasible_flag = bool(snap) if snap >= 0 else \
+                self._feasible_now(i)
             goodput_items += st.completed * s["slo_attainment"]
             per_job.append({
                 "job_id": st.job.job_id,
@@ -1349,7 +1491,7 @@ class ClusterEngine:
                 "slo_ms": float(st.job.slo_ms),
                 "p95_ms": float(s["p95_s"]) * 1e3,
                 "tail_p95_ms": float(st.acc.tail_p95()) * 1e3,
-                "feasible": bool(base <= st.job.slo_s),
+                "feasible": feasible_flag,
                 "slo_attainment": float(s["slo_attainment"]),
                 "throughput": float(s["throughput"]),
                 "stall_s": float(st.stall_time),
@@ -1401,6 +1543,7 @@ class ClusterEngine:
                     float(self.resize_equiv_migration_s),
                 "stall_capped_s": float(self.stall_capped_s),
                 "max_clock_skew_s": float(self.max_clock_skew_s),
+                "truncated": bool(self.truncated),
                 "conserved": bool(conserved),
                 "min_attainment":
                     min((r["slo_attainment"] for r in per_job), default=1.0),
@@ -1410,6 +1553,195 @@ class ClusterEngine:
                             for r in feasible)),
             },
         }
+
+
+class VectorClusterEngine(ClusterEngine):
+    """`ClusterEngine` whose event loop runs over the `SimState` arrays.
+
+    Two regimes, chosen per run:
+
+    * **exact** (default; any adaptive controller, churn, open loop,
+      partitioning, or store coupling): the next event is the argmin over
+      the active-clock array instead of a heap pop.  Ties break toward
+      the lowest index — the same order the reference heap's
+      ``(clock, idx, epoch)`` tuples give — and stale heap entries in the
+      reference only ever delay admissions to a later loop iteration
+      *within* the same event round, so the two loops produce the same
+      event sequence, the same RNG draws, and bit-identical reports (the
+      conformance tests pin this on the BENCH_cluster and BENCH_churn
+      scenarios).
+    * **bulk** (static-knob, mtl=1, closed-loop `SimExecutor` fleets with
+      no churn/partition/store coupling — the 1000x1000 scale scenario):
+      jobs never interact (no stalls, no migrations, no shared surface),
+      so each advances to the horizon in chunked vectorized draws, with
+      the WHOLE fleet priced in one `fleet_step_latency` call up front.
+      Statistically equivalent to the reference (same latency law per
+      step), not bit-identical (one RNG call per chunk instead of two per
+      step); per-event artifacts nobody aggregates (`event_log`, per-step
+      traces, tail windows) are skipped.
+    """
+
+    def run(self, *, sim_time_limit: float = 120.0,
+            max_steps: int = 500_000) -> dict:
+        self._horizon = sim_time_limit
+        self._heap = None       # _charge_* heap pushes are no-ops: the
+        #                         clock arrays are always current
+        if self._bulk_eligible():
+            rep = self._run_bulk(sim_time_limit=sim_time_limit,
+                                 max_steps=max_steps)
+            if rep is not None:
+                return rep
+        return self._run_exact(sim_time_limit=sim_time_limit,
+                               max_steps=max_steps)
+
+    # -- exact mode: the reference event order, argmin-driven ----------------
+    def _run_exact(self, *, sim_time_limit: float, max_steps: int) -> dict:
+        sim = self._sim
+        steps = 0
+        while steps < max_steps:
+            nxt = sim.next_event_clock()
+            while self._admissions_due(nxt, sim_time_limit):
+                self._admit(self._pending[self._pending_i])
+                self._pending_i += 1
+                nxt = sim.next_event_clock()
+            i = sim.frontier()
+            if i < 0:
+                break
+            st = self.states[i]
+            t = st.clock
+            if t >= sim_time_limit:
+                # every remaining active clock is at the horizon, and any
+                # pending arrival before it was admitted above — the
+                # reference loop reaches the same state by draining its
+                # heap entry by entry
+                break
+            self.event_log.append((t, st.job.job_id))
+            stalls_before = st.stall_time + st.acc.compile_stall_s
+            self._step(st, i)
+            steps += 1
+            if st.stall_time + st.acc.compile_stall_s > stalls_before:
+                self._note_skew(st, i)
+            self._maybe_drain(i)
+        self.steps_run = steps
+        self.truncated = bool(steps >= max_steps
+                              and self._work_remaining(sim_time_limit))
+        self._persist_profiles()
+        rep = self.report()
+        self._record_run(rep, sim_time_limit=sim_time_limit,
+                         max_steps=max_steps)
+        return rep
+
+    # -- bulk mode: independent static jobs advance in chunks ----------------
+    def _bulk_eligible(self) -> bool:
+        """Bulk needs provably independent jobs: static knobs at mtl=1
+        (no launch stalls, so clocks never couple through the skew/stall
+        paths), closed loop, simulated executors on whole-device shares,
+        no churn, no partitioning, and no store/surface coupling."""
+        if (self.partition is not None
+                or self._pending_i < len(self._pending)
+                or self.profile_store is not None
+                or self.surface_library is not None
+                or self.stall_cap_s is not None
+                or not self.states):
+            return False
+        for st in self.states:
+            ctrl = st.controller
+            if getattr(ctrl, "name", "") != "static":
+                return False
+            if int(getattr(ctrl, "mtl", 0)) != 1:
+                return False
+            if st.oq is not None or st.depart_s is not None:
+                return False
+            ex = st.executor
+            if (hasattr(ex, "cache_stats")      # wall-clock executor
+                    or getattr(ex, "mesh_shape", None) is not None
+                    or getattr(ex, "partition", None) is not None):
+                return False
+            if not st.active:
+                return False
+        return True
+
+    def _run_bulk(self, *, sim_time_limit: float,
+                  max_steps: int) -> Optional[dict]:
+        sim = self._sim
+        n = len(self.states)
+        acts = [Action(bs=int(st.controller.bs), mtl=int(st.controller.mtl))
+                for st in self.states]
+        devices = [st.executor.device for st in self.states]
+        profiles = [st.executor.profile for st in self.states]
+        bs = np.asarray([a.bs for a in acts], np.float64)
+        mtl = np.asarray([a.mtl for a in acts], np.float64)
+        # the whole fleet priced in ONE vectorized call per event round
+        # (bulk has exactly one round: knobs are static)
+        means = dm.fleet_step_latency(devices, profiles, bs, mtl)
+        # pre-flight: if the fleet's expected step count cannot fit the
+        # budget, bulk would distribute the truncation differently than
+        # the reference interleaving — run exact instead, which then
+        # raises the `truncated` flag the honest way
+        remaining = np.maximum(sim_time_limit - sim.clock[:n], 0.0)
+        est = float(np.sum(remaining / np.maximum(means, 1e-12)))
+        if not np.isfinite(est) or est > 0.9 * max_steps:
+            return None
+        steps_total = 0
+        for i, st in enumerate(self.states):
+            act, mean = acts[i], float(means[i])
+            power_w = dm.power(st.executor.device, st.executor.profile,
+                               act.bs, act.mtl)
+            items_per_step = act.bs * act.mtl
+            r = min(items_per_step, 64)
+            sampler = st.executor.sampler
+            rng = sampler.rng
+            sigma = sampler.sigma
+            spike_p, spike_mult = sampler.spike_p, sampler.spike_mult
+            clock = float(sim.clock[i])
+            slo = st.job.slo_s
+            job_steps = 0
+            while clock < sim_time_limit and steps_total < max_steps:
+                want = (sim_time_limit - clock) / mean
+                n_est = min(int(want * 1.05) + 8, max_steps - steps_total)
+                # the per-step latency law of LatencySampler.sample,
+                # drawn for a whole chunk at once
+                lats = mean * np.exp(rng.normal(0.0, sigma, n_est))
+                lats[rng.random(n_est) < spike_p] *= spike_mult
+                starts = clock + np.concatenate(
+                    ([0.0], np.cumsum(lats[:-1])))
+                # a step is served iff it STARTS before the horizon —
+                # the reference's `t >= sim_time_limit` skip
+                n_acc = int(np.searchsorted(starts, sim_time_limit,
+                                            side="left"))
+                all_accepted = n_acc == n_est
+                lats = lats[:n_acc]
+                if n_acc:
+                    # request latencies: lognormal + spikes around each
+                    # accepted step's sampled latency (run_step's law)
+                    req = lats[:, None] * np.exp(
+                        rng.normal(0.0, sigma, (n_acc, r)))
+                    req[rng.random((n_acc, r)) < spike_p] *= spike_mult
+                    busy = float(lats.sum())
+                    st.acc.record_bulk(items=items_per_step * n_acc,
+                                       busy_s=busy,
+                                       energy_j=power_w * busy,
+                                       request_latencies=req, slo=slo)
+                    clock += busy
+                    st.executor.clock += busy
+                    job_steps += n_acc
+                    steps_total += n_acc
+                if not all_accepted:
+                    break
+            sim.clock[i] = clock
+            sim.arrival_mark[i] = clock
+            sim.submitted[i] += items_per_step * job_steps
+            sim.completed[i] += items_per_step * job_steps
+            st.prev = act
+            sim.feasible_at_serve[i] = 1 if self._feasible_now(i) else 0
+        self.steps_run = steps_total
+        self.truncated = bool(steps_total >= max_steps
+                              and self._work_remaining(sim_time_limit))
+        self._persist_profiles()
+        rep = self.report()
+        self._record_run(rep, sim_time_limit=sim_time_limit,
+                         max_steps=max_steps)
+        return rep
 
 
 # ---------------------------------------------------------------------------
@@ -1466,14 +1798,19 @@ def run_paper_cluster(mode: str = "auto", *, jobs: Optional[Sequence] = None,
                       fleet: Optional[Sequence[DeviceSpec]] = None,
                       n_devices: int = 12, sim_time_limit: float = 90.0,
                       arrival_rates: Optional[dict] = None,
-                      seed: int = 0) -> dict:
+                      seed: int = 0, vectorized: bool = False,
+                      record: Optional[str] = None,
+                      record_store=None) -> dict:
     """Serve the Table-4 jobs on a simulated fleet under one policy."""
     from repro.serving.workload import PAPER_JOBS
     jobs = list(jobs) if jobs is not None else list(PAPER_JOBS)
     fleet = list(fleet) if fleet is not None else gpu_fleet(n_devices)
-    eng = ClusterEngine(jobs, fleet,
-                        controller_factory=paper_controller_factory(mode),
-                        arrival_rates=arrival_rates, seed=seed)
+    cls = VectorClusterEngine if vectorized else ClusterEngine
+    eng = cls(jobs, fleet,
+              controller_factory=paper_controller_factory(mode),
+              arrival_rates=arrival_rates, seed=seed,
+              record=record, record_store=record_store,
+              record_meta={"entry": "paper", "mode": mode})
     rep = eng.run(sim_time_limit=sim_time_limit)
     rep["aggregate"]["mode"] = mode
     return rep
@@ -1488,7 +1825,9 @@ def run_churn_cluster(policy: str = "surface", *,
                       n_devices: int = 5, horizon_s: float = 150.0,
                       mode: str = "hybrid", seed: int = 0,
                       trace_kwargs: Optional[dict] = None,
-                      profile_store=None) -> dict:
+                      profile_store=None, vectorized: bool = False,
+                      record: Optional[str] = None,
+                      record_store=None) -> dict:
     """The churn scenario under one placement policy.
 
     policy: "union"   — static placement over the union of every tenancy
@@ -1511,13 +1850,16 @@ def run_churn_cluster(policy: str = "surface", *,
                             **(trace_kwargs or {}))
     fleet = list(fleet) if fleet is not None else gpu_fleet(n_devices)
     lib = SurfaceLibrary() if policy == "surface" else None
-    eng = ClusterEngine(
+    cls = VectorClusterEngine if vectorized else ClusterEngine
+    eng = cls(
         [], fleet, churn=trace,
         controller_factory=paper_controller_factory(mode, surface=lib),
         static_union=(policy == "union"),
         anticipate=(policy != "union"),
         surface_library=lib, seed=seed,
-        profile_store=(profile_store if policy == "surface" else None))
+        profile_store=(profile_store if policy == "surface" else None),
+        record=record, record_store=record_store,
+        record_meta={"entry": "churn", "policy": policy, "mode": mode})
     rep = eng.run(sim_time_limit=horizon_s)
     rep["aggregate"]["policy"] = policy
     rep["aggregate"]["mode"] = mode
@@ -1538,7 +1880,9 @@ def run_partition_cluster(policy: str = "het", *,
                           n_devices: int = 3, horizon_s: float = 120.0,
                           mode: str = "hybrid", seed: int = 0,
                           trace_kwargs: Optional[dict] = None,
-                          profile_store=None) -> dict:
+                          profile_store=None, vectorized: bool = False,
+                          record: Optional[str] = None,
+                          record_store=None) -> dict:
     """The spatial-partitioning scenario on a mixed small/large-DNN trace.
 
     policy: "uniform" — the existing dynamic churn engine: co-residents
@@ -1562,12 +1906,15 @@ def run_partition_cluster(policy: str = "het", *,
     kind = {"uniform": "mps", "het": "mps", "het-mig": "mig"}[policy]
     uniform = policy == "uniform"
     ladder = None if uniform else pt.share_ladder(kind)
-    eng = ClusterEngine(
+    cls = VectorClusterEngine if vectorized else ClusterEngine
+    eng = cls(
         [], fleet, churn=trace,
         controller_factory=paper_controller_factory(mode,
                                                     share_ladder=ladder),
         partition=kind, partition_uniform=uniform, seed=seed,
-        profile_store=profile_store)
+        profile_store=profile_store,
+        record=record, record_store=record_store,
+        record_meta={"entry": "partition", "policy": policy, "mode": mode})
     rep = eng.run(sim_time_limit=horizon_s)
     rep["aggregate"]["policy"] = policy
     rep["aggregate"]["mode"] = mode

@@ -170,6 +170,33 @@ def mt_latency_curve(dev: Device, prof: JobProfile, bs: int, mtls) -> np.ndarray
     return mt_latency_grid(dev, prof, [bs], mtls)[0]
 
 
+def fleet_step_latency(devices, profiles, bs, mtl) -> np.ndarray:
+    """Per-instance step latency for a whole FLEET in one call: job i runs
+    (bs[i], mtl[i]) with profiles[i] on devices[i] (each job's OWN
+    share-adjusted device), shape (n_jobs,).  This is `mt_latency`
+    broadcast over jobs instead of over knobs — the one pricing round the
+    vectorized cluster path makes per event round, in place of n_jobs
+    scalar calls.  The expressions are term-for-term the grid formulas
+    above (steady_ms, gpu_img, rho, the MT host/GPU interference), so at
+    mtl=1 the result equals `batch_latency` up to exact IEEE identities
+    (x * 1.0 == x)."""
+    bs = np.asarray(bs, np.float64)
+    m = np.asarray(mtl, np.float64)
+    peak = np.asarray([d.peak_flops for d in devices], np.float64)
+    bw = np.asarray([d.hbm_bw for d in devices], np.float64)
+    host_ms = np.asarray([p.host_ms for p in profiles], np.float64)
+    gpu1_ms = np.asarray([p.gpu1_ms for p in profiles], np.float64)
+    amort = np.asarray([p.amort for p in profiles], np.float64)
+    flops = np.asarray([p.flops for p in profiles], np.float64)
+    pbytes = np.asarray([p.param_bytes for p in profiles], np.float64)
+    steady_ms = np.maximum(flops / (peak * STEADY_EFF),
+                           pbytes / bw / 32.0) * 1e3
+    gpu_img = np.maximum(steady_ms, gpu1_ms * bs ** (-amort))
+    host = host_ms * rho(bs) * (1.0 + CHI_HOST * (m - 1.0))
+    gpu = gpu_img * m * (1.0 + EPS_MT * (m - 1.0))
+    return bs * (host + gpu) / 1e3
+
+
 # ---------------------------------------------------------------------------
 # Spatial-partition pricing (serving/partition.py's third knob).
 #

@@ -117,6 +117,9 @@ class RunAccumulator:
         self.total_time = 0.0
         self.energy_j = 0.0
         self.latencies: list = []
+        self._bulk_lats: list = []     # request-latency ARRAYS appended by
+        #                                record_bulk — kept whole instead of
+        #                                exploded into the Python list
         self.trace: list = []          # (t, bs_or_mtl, p95, throughput)
         self.violations = 0
         self.requests = 0
@@ -132,6 +135,30 @@ class RunAccumulator:
         self.requests += len(lat)
         self.violations += sum(1 for x in lat if x > slo)
 
+    def record_bulk(self, *, items: int, busy_s: float, energy_j: float,
+                    request_latencies, slo: float) -> None:
+        """Aggregate a whole CHUNK of steps at once (the vectorized
+        cluster path): totals accumulate exactly as repeated
+        `record_step` calls would, but the request latencies stay one
+        numpy array instead of thousands of list appends."""
+        self.total_items += int(items)
+        self.total_time += float(busy_s)
+        self.energy_j += float(energy_j)
+        lat = np.asarray(request_latencies, np.float64).reshape(-1)
+        if lat.size:
+            self._bulk_lats.append(lat)
+        self.requests += int(lat.size)
+        self.violations += int(np.count_nonzero(lat > slo))
+
+    def _lat_array(self) -> np.ndarray:
+        """All request latencies in arrival order, whichever recording
+        path produced them."""
+        if not self._bulk_lats:
+            return np.asarray(self.latencies)
+        parts = ([np.asarray(self.latencies, np.float64)]
+                 if self.latencies else []) + self._bulk_lats
+        return np.concatenate(parts)
+
     @property
     def throughput(self) -> float:
         return self.total_items / self.total_time if self.total_time else 0.0
@@ -146,18 +173,20 @@ class RunAccumulator:
 
     @property
     def p95(self) -> float:
-        if not self.latencies:
+        lat = self._lat_array()
+        if not lat.size:
             return 0.0
-        return float(np.quantile(np.asarray(self.latencies), 0.95))
+        return float(np.quantile(lat, 0.95))
 
     def tail_p95(self, frac: float = 0.5) -> float:
         """p95 over the last `frac` of requests — the steady-state tail once
         the scaler's search transient (which p95 over the whole run mixes
         in) has died out."""
-        if not self.latencies:
+        lat = self._lat_array()
+        if not lat.size:
             return 0.0
-        n = max(1, int(len(self.latencies) * frac))
-        return float(np.quantile(np.asarray(self.latencies[-n:]), 0.95))
+        n = max(1, int(lat.size * frac))
+        return float(np.quantile(lat[-n:], 0.95))
 
     @property
     def slo_attainment(self) -> float:
