@@ -33,6 +33,10 @@ Suites (one per paper table/figure — DESIGN.md §8):
   burst         open-loop bursty arrivals: DNNScaler vs static (beyond paper)
   sim           fleet-scale simulator: vectorized engine vs object reference
                 at 1000 jobs x 1000 devices (gated on the speedup ratio)
+  tokens        token-level continuous batching: slot engine vs the static
+                bucketed baseline on one ragged decode trace (gated on
+                goodput and the capped continuous/static ratio), plus the
+                paged-KV kernel vs the ragged oracle (maxerr)
   alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
   matcomp       ablation: matrix completion vs naive interpolation
   kernels       Pallas kernel micro-benches (interpret mode)
@@ -53,7 +57,7 @@ import time
 
 def suites():
     from benchmarks import (kernel_benches, paper_benches, roofline_bench,
-                            sim_benches)
+                            sim_benches, token_benches)
     return {
         "fig1": paper_benches.bench_fig1_sweeps,
         "table5": paper_benches.bench_table5_profiler,
@@ -72,6 +76,7 @@ def suites():
         "matcomp": paper_benches.bench_matrix_completion_ablation,
         "matcomp_nl": paper_benches.bench_matcomp_nonlinear,
         "sim": sim_benches.bench_sim,
+        "tokens": token_benches.bench_tokens,
         "kernels": kernel_benches.bench_kernels,
         "real_decode": kernel_benches.bench_real_decode,
         "roofline": roofline_bench.bench_roofline,
@@ -139,7 +144,15 @@ def check_against(base_dir: str, *, tol: float = 0.10,
     for path in sorted(glob.glob(os.path.join(base_dir, "BENCH_*.json"))):
         committed = json.load(open(path))
         suite = committed.get("suite")
-        if suite not in table or (only and suite not in only):
+        if only and suite not in only:
+            continue
+        if suite not in table:
+            # a committed baseline whose suite the harness no longer knows
+            # is a broken gate, not a skip: the silent pass used to hide a
+            # renamed/deleted suite until its regressions shipped
+            print(f"CHECK {suite or path}: UNKNOWN suite for baseline "
+                  f"{os.path.basename(path)} — not registered in suites()")
+            regressions += 1
             continue
         gated = _CHECKED_METRICS + tuple(_LOWER_METRICS)
         if not any(m in _parse_metrics(r.get("derived", ""))
@@ -151,6 +164,13 @@ def check_against(base_dir: str, *, tol: float = 0.10,
             fresh_rows = table[suite]()
         except Exception as e:  # noqa: BLE001
             print(f"CHECK {suite}: ERROR {type(e).__name__}: {e}")
+            regressions += 1
+            continue
+        if not fresh_rows:
+            # a suite that exists in the baseline dir but produced nothing
+            # fresh would previously sail through the row loop untested
+            print(f"CHECK {suite}: NO FRESH ROWS (baseline has "
+                  f"{len(committed.get('rows', []))})")
             regressions += 1
             continue
         fresh = {name: _parse_metrics(derived)

@@ -10,6 +10,10 @@ floor from flapping the --check gate (0.9 x 25 = 22.5 >= 20) while the
 uncapped `raw_speedup` stays in the row for the curious.  `agree` is the
 vector/object aggregate-throughput ratio — the bulk path is statistically
 equivalent, not bit-identical, so it should sit within a percent of 1.
+
+The `bulk_vectorized_delta` row (non-gated) isolates the bulk path's own
+internals: fleet-vectorized per-round draws (`_bulk_vector`) vs the legacy
+per-job chunk loop (`_bulk_jobloop`), same scenario.
 """
 
 from __future__ import annotations
@@ -65,4 +69,20 @@ def bench_sim():
     rows.append((f"sim/{N_JOBS}x{N_DEVICES}/speedup", 0.0,
                  f"speedup={min(raw, SPEEDUP_CAP):.2f}x,"
                  f"raw_speedup={raw:.2f}x,agree={agree:.4f}"))
+
+    # bulk-mode internals: fleet-vectorized round draws vs the legacy
+    # per-job chunk loop (the >10k-device follow-up).  Non-gated — the
+    # metric key is deliberately NOT thr/goodput/speedup, it is a
+    # wall-clock ratio on one machine; the statistical-agreement ratio
+    # rides along for the curious.
+    class _LoopEngine(VectorClusterEngine):
+        bulk_use_loop = True
+
+    el, rl, tl = _timed_run(_LoopEngine)
+    vec_ratio = (ev.steps_run / tv) / (el.steps_run / tl)
+    bulk_agree = (rv["aggregate"]["aggregate_throughput"]
+                  / max(rl["aggregate"]["aggregate_throughput"], 1e-9))
+    rows.append((f"sim/{N_JOBS}x{N_DEVICES}/bulk_vectorized_delta", tl * 1e6,
+                 f"bulk_vec_speedup={vec_ratio:.2f}x,"
+                 f"bulk_agree={bulk_agree:.4f}"))
     return rows

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import decode_attention_fwd
+from repro.kernels.decode_attention.paged_decode_attention import \
+    paged_decode_attention_fwd
 from repro.perf import autotune
 
 
@@ -22,6 +24,7 @@ def _on_cpu() -> bool:
 
 
 DEFAULT_BLOCK_K = autotune.DEFAULTS["decode_attention"]["block_k"]
+DEFAULT_PAGE_SIZE = autotune.DEFAULTS["paged_decode_attention"]["page_size"]
 
 
 def _resolve_block_k(block_k: Optional[int], dtype, BKV: int, G: int,
@@ -144,3 +147,84 @@ def _decode_attention_kvmajor(
                                logit_cap=logit_cap, block_k=block_k,
                                interpret=interpret)
     return out.reshape(B, H, hd)
+
+
+def resolve_page_size(dtype, *, B: int, H: int, KV: int, hd: int,
+                      seq_budget: int,
+                      page_size: Optional[int] = None) -> int:
+    """Page size for a paged KV cache serving this geometry.
+
+    Unlike ``block_k`` (a tiling knob over fixed inputs), the page size
+    changes the cache LAYOUT, so it is resolved once at cache-construction
+    time: explicit wins, else the autotune cache's best-known page size for
+    the shape class, else the historical default."""
+    if page_size is not None:
+        return page_size
+    cfg = autotune.lookup("paged_decode_attention", dtype, BKV=B * KV,
+                          G=H // KV, hd=hd, S=seq_budget)
+    return cfg["page_size"] if cfg else DEFAULT_PAGE_SIZE
+
+
+def paged_decode_attention(
+    q: jax.Array,            # (B, H, hd) — one new token per live slot
+    k_pages: jax.Array,      # (P, page_size, KV, hd) — shared page pool
+    v_pages: jax.Array,      # (P, page_size, KV, hd)
+    kv_lens,                 # (B,) int32 — valid cache length per slot
+    block_tables,            # (B, ns) int32 — physical page ids per slot
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Decode attention over a PAGED ragged-batch KV cache (the token
+    engine's layout).  Slot ``b`` attends over ``kv_lens[b]`` keys read
+    from pages ``block_tables[b, :]`` of the shared pool; slots at
+    different sequence positions share one batch, and a freed slot
+    (``kv_lens[b] == 0``) returns zeros.  Validated against
+    ``ref.decode_attention_ref_ragged``."""
+    return _paged_decode_attention(q, k_pages, v_pages, kv_lens,
+                                   block_tables, window=window,
+                                   logit_cap=logit_cap, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "logit_cap", "interpret"))
+def _paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    kv_lens,
+    block_tables,
+    *,
+    window: Optional[int],
+    logit_cap: Optional[float],
+    interpret: Optional[bool],
+) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    B, H, hd = q.shape
+    P, psz, KV, _ = k_pages.shape
+    G = H // KV
+    ns = block_tables.shape[1]
+
+    lens = jnp.asarray(kv_lens, jnp.int32)
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    # table entries past a slot's length are never read (pl.when skips the
+    # page) but their index still reaches the BlockSpec index_map — clamp
+    # padding entries into the pool so the prefetch address is always valid
+    pages_needed = (lens[:, None] + psz - 1) // psz
+    tbl = jnp.where(jnp.arange(ns)[None, :] < pages_needed, tbl, 0)
+
+    # fold KV heads into the page axis (same fold as the dense wrapper):
+    # pool page p of kv head k lives at row k*P + p
+    q3 = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    k3 = k_pages.transpose(2, 0, 1, 3).reshape(KV * P, psz, hd)
+    v3 = v_pages.transpose(2, 0, 1, 3).reshape(KV * P, psz, hd)
+    tbl3 = (tbl[:, None, :]
+            + (jnp.arange(KV, dtype=jnp.int32) * P)[None, :, None])
+    tbl3 = tbl3.reshape(B * KV, ns)
+    lens3 = jnp.broadcast_to(lens[:, None], (B, KV)).reshape(B * KV)
+
+    out = paged_decode_attention_fwd(q3, k3, v3, lens3, tbl3, window=window,
+                                     logit_cap=logit_cap, interpret=interpret)
+    return out.reshape(B, KV, G, hd).reshape(B, H, hd)

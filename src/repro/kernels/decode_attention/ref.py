@@ -35,3 +35,38 @@ def decode_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref_ragged(
+    q: jax.Array,        # (B, H, hd)
+    k_cache: jax.Array,  # (B, S, KV, hd)
+    v_cache: jax.Array,  # (B, S, KV, hd)
+    lens,                # (B,) int32 — valid cache entries per slot: [0, lens)
+    *,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    """Ragged-batch oracle: each slot attends over its OWN cache length.
+
+    This is the continuous-batching shape — live decode slots at different
+    sequence positions share one batch — and the reference the paged-KV
+    kernel is validated against.  A slot with ``lens[b] == 0`` (a freed /
+    padding slot) returns zeros, matching the kernel's empty accumulator."""
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = hd ** -0.5
+    lens = jnp.asarray(lens, jnp.int32)
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache.astype(jnp.float32))
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    kpos = jnp.arange(S)[None, :]                      # (1, S)
+    mask = kpos < lens[:, None]                        # (B, S)
+    if window is not None:
+        mask = mask & (kpos > lens[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    out = jnp.where(lens[:, None, None, None] > 0, out, 0.0)
+    return out.reshape(B, H, hd).astype(q.dtype)

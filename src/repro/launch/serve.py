@@ -96,6 +96,28 @@ def main() -> None:
                     choices=["union", "dynamic", "surface"],
                     help="placement policy for --churn (see "
                          "serving.cluster.run_churn_cluster)")
+    ap.add_argument("--token-engine", action="store_true",
+                    help="token-level continuous batching for a decode "
+                         "job: bs = max live decode slots, admit-on-free-"
+                         "slot / evict-on-EOS, TTFT+TPOT SLOs "
+                         "(serving.token_engine)")
+    ap.add_argument("--token-policy", default="both",
+                    choices=["continuous", "static", "both"],
+                    help="slot engine, fixed-shape bucketed baseline, or "
+                         "both on the same ragged trace")
+    ap.add_argument("--slots", type=int, default=16,
+                    help="max live decode slots (continuous) / batch size "
+                         "(static baseline) for --token-engine")
+    ap.add_argument("--requests", type=int, default=300,
+                    help="trace length for --token-engine")
+    ap.add_argument("--rate-rps", type=float, default=12.0,
+                    help="arrival rate for the --token-engine trace")
+    ap.add_argument("--ttft-slo-ms", type=float, default=1000.0)
+    ap.add_argument("--tpot-slo-ms", type=float, default=50.0)
+    ap.add_argument("--prefill-mode", default="cotenant",
+                    choices=["cotenant", "timeslice"],
+                    help="prefill priced as a co-resident tenant vs "
+                         "time-sliced on the decode tenant")
     ap.add_argument("--partition", action="store_true",
                     help="spatial partitioning (MPS/MIG-style slices): "
                          "serve the mixed small/large trace with the "
@@ -162,6 +184,47 @@ def main() -> None:
         if agg.get("truncated"):
             print("WARNING: run truncated at max_steps — metrics cover a "
                   "partial horizon, not the full simulated window")
+
+    if args.token_engine:
+        from repro.serving.token_engine import (ragged_decode_trace,
+                                                run_token_serving)
+        from repro.configs.base import get_config
+        cfg = get_config(args.arch or "gemma2-2b")
+        prof = dm.llm_profile(cfg, mode="decode", kv_seq_budget=1024)
+        trace = ragged_decode_trace(args.requests, args.seed,
+                                    rate_rps=args.rate_rps)
+        policies = (["continuous", "static"] if args.token_policy == "both"
+                    else [args.token_policy])
+        print(f"token-engine[{cfg.name}]: {len(trace)} requests @ "
+              f"{args.rate_rps:.1f} req/s, {args.slots} slots, "
+              f"prefill={args.prefill_mode}, TTFT SLO "
+              f"{args.ttft_slo_ms:.0f}ms / TPOT SLO "
+              f"{args.tpot_slo_ms:.1f}ms")
+        reports = {}
+        for pol in policies:
+            rep = run_token_serving(
+                prof, policy=pol, seed=args.seed, trace=trace,
+                max_slots=args.slots, static_bs=args.slots, mtl=args.mtl,
+                ttft_slo_s=args.ttft_slo_ms / 1e3,
+                tpot_slo_s=args.tpot_slo_ms / 1e3,
+                use_controller=args.controller == "hybrid",
+                prefill_mode=args.prefill_mode)
+            warn_truncated(rep)
+            assert rep["conserved"], "request conservation violated"
+            reports[pol] = rep
+            print(f"  {pol:>10}: goodput {rep['goodput_tokens_s']:.0f} "
+                  f"tok/s (throughput {rep['throughput_tokens_s']:.0f}), "
+                  f"TTFT p95 {rep['ttft_p95_s']*1e3:.0f}ms "
+                  f"(attain {rep['ttft_attainment']:.3f}), TPOT p95 "
+                  f"{rep['tpot_p95_s']*1e3:.2f}ms "
+                  f"(attain {rep['tpot_attainment']:.3f}), "
+                  f"mean live slots {rep['mean_live_slots']:.1f}, "
+                  f"conservation OK")
+        if len(reports) == 2:
+            ratio = (reports["continuous"]["goodput_tokens_s"]
+                     / max(reports["static"]["goodput_tokens_s"], 1e-9))
+            print(f"  continuous/static goodput ratio: {ratio:.2f}x")
+        return
 
     if args.partition:
         from repro.serving.cluster import run_partition_cluster

@@ -52,6 +52,7 @@ _LEGACY_CACHE_FILE = "autotune_cache.json"
 DEFAULTS = {
     "flash_attention": {"block_q": 128, "block_k": 128},
     "decode_attention": {"block_k": 256},
+    "paged_decode_attention": {"page_size": 64},
     "ssd_scan": {"chunk": 128},
 }
 
@@ -169,6 +170,12 @@ def shape_class(kernel: str, **dims) -> dict:
     if kernel == "decode_attention":
         return {"BKV": _bucket(dims.get("BKV", 1), 1),
                 "G": dims["G"], "hd": dims["hd"], "S": _bucket(dims["S"])}
+    if kernel == "paged_decode_attention":
+        # S is the per-slot sequence BUDGET the paged cache is sized for —
+        # the page size is a layout knob chosen at cache construction, so
+        # the class is keyed the same way as the dense decode kernel
+        return {"BKV": _bucket(dims.get("BKV", 1), 1),
+                "G": dims["G"], "hd": dims["hd"], "S": _bucket(dims["S"])}
     if kernel == "ssd_scan":
         return {"H": _bucket(dims.get("H", 1), 1),
                 "P": dims["P"], "N": dims["N"], "T": _bucket(dims["T"])}
@@ -224,6 +231,18 @@ def _decode_model(cls: dict, cand: dict, sz: int) -> tuple:
     return bound, vmem
 
 
+def _paged_candidates(cls: dict) -> list:
+    out = [{"page_size": p} for p in (32, 64, 128, 256) if p <= cls["S"]]
+    return out or [dict(DEFAULTS["paged_decode_attention"])]
+
+
+def _paged_model(cls: dict, cand: dict, sz: int) -> tuple:
+    # a page is the paged kernel's k-block: same arithmetic-intensity terms
+    # as the dense decode kernel at block_k = page_size (the block table
+    # adds only a few scalar-prefetch bytes per grid step)
+    return _decode_model(cls, {"block_k": cand["page_size"]}, sz)
+
+
 def _ssd_candidates(cls: dict) -> list:
     out = [{"chunk": c} for c in (32, 64, 128, 256)
            if c <= cls["T"] and cls["T"] % c == 0]
@@ -246,6 +265,7 @@ def _ssd_model(cls: dict, cand: dict, sz: int) -> tuple:
 _KERNELS: dict = {
     "flash_attention": (_flash_candidates, _flash_model),
     "decode_attention": (_decode_candidates, _decode_model),
+    "paged_decode_attention": (_paged_candidates, _paged_model),
     "ssd_scan": (_ssd_candidates, _ssd_model),
 }
 
@@ -322,6 +342,28 @@ def _decode_bench(cls: dict, dtype: str, cand: dict) -> Callable:
                                     block_k=cand["block_k"])
 
 
+def _paged_bench(cls: dict, dtype: str, cand: dict) -> Callable:
+    # unlike block_k, the candidate page size changes the INPUT layout
+    # (the page pool is built at that granularity), so each candidate is
+    # timed end to end on its own cache layout — that IS the decision the
+    # token engine makes once at cache construction
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    B = cls["BKV"]
+    G, hd, S = cls["G"], cls["hd"], cls["S"]
+    psz = cand["page_size"]
+    npages = max(S // psz, 1)
+    P = B * npages
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, G, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, psz, 1, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, psz, 1, hd), jnp.float32).astype(dtype)
+    tbl = jnp.arange(P, dtype=jnp.int32).reshape(B, npages)
+    lens = jnp.full((B,), S, jnp.int32)    # worst case: every slot full
+    return lambda: paged_decode_attention(q, kp, vp, lens, tbl)
+
+
 def _ssd_bench(cls: dict, dtype: str, cand: dict) -> Callable:
     import jax
     import jax.numpy as jnp
@@ -337,7 +379,7 @@ def _ssd_bench(cls: dict, dtype: str, cand: dict) -> Callable:
 
 
 _BENCH = {"flash_attention": _flash_bench, "decode_attention": _decode_bench,
-          "ssd_scan": _ssd_bench}
+          "paged_decode_attention": _paged_bench, "ssd_scan": _ssd_bench}
 
 
 # ---------------------------------------------------------------------------

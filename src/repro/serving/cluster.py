@@ -1661,6 +1661,10 @@ class VectorClusterEngine(ClusterEngine):
                 return False
         return True
 
+    # legacy per-job chunk loop kept as the reference implementation the
+    # fleet-vectorized path is validated against (and as an escape hatch)
+    bulk_use_loop = False
+
     def _run_bulk(self, *, sim_time_limit: float,
                   max_steps: int) -> Optional[dict]:
         sim = self._sim
@@ -1682,6 +1686,24 @@ class VectorClusterEngine(ClusterEngine):
         est = float(np.sum(remaining / np.maximum(means, 1e-12)))
         if not np.isfinite(est) or est > 0.9 * max_steps:
             return None
+        if self.bulk_use_loop:
+            steps_total = self._bulk_jobloop(acts, means, sim_time_limit,
+                                             max_steps)
+        else:
+            steps_total = self._bulk_vector(acts, means, sim_time_limit,
+                                            max_steps)
+        self.steps_run = steps_total
+        self.truncated = bool(steps_total >= max_steps
+                              and self._work_remaining(sim_time_limit))
+        self._persist_profiles()
+        rep = self.report()
+        self._record_run(rep, sim_time_limit=sim_time_limit,
+                         max_steps=max_steps)
+        return rep
+
+    def _bulk_jobloop(self, acts, means, sim_time_limit: float,
+                      max_steps: int) -> int:
+        sim = self._sim
         steps_total = 0
         for i, st in enumerate(self.states):
             act, mean = acts[i], float(means[i])
@@ -1734,14 +1756,105 @@ class VectorClusterEngine(ClusterEngine):
             sim.completed[i] += items_per_step * job_steps
             st.prev = act
             sim.feasible_at_serve[i] = 1 if self._feasible_now(i) else 0
-        self.steps_run = steps_total
-        self.truncated = bool(steps_total >= max_steps
-                              and self._work_remaining(sim_time_limit))
-        self._persist_profiles()
-        rep = self.report()
-        self._record_run(rep, sim_time_limit=sim_time_limit,
-                         max_steps=max_steps)
-        return rep
+        return steps_total
+
+    def _bulk_vector(self, acts, means, sim_time_limit: float,
+                     max_steps: int) -> int:
+        """The whole FLEET advances per round: one (jobs x chunk) draw
+        replaces the per-job Python chunk loop (the >10k-device follow-up).
+        Same latency law per step as `_bulk_jobloop`; statistically
+        equivalent, not bit-identical — per-job sampler streams are
+        replaced by one fleet-level stream (one generator call per round
+        instead of four per job), and each job's request-latency block is
+        a slice of one pooled draw.  The global `max_steps` budget is
+        consumed in job order, matching the loop's truncation shape."""
+        sim = self._sim
+        n = len(self.states)
+        means = np.asarray(means, np.float64)
+        items_per_step = np.asarray([a.bs * a.mtl for a in acts], np.int64)
+        power_w = np.asarray(
+            [dm.power(st.executor.device, st.executor.profile,
+                      acts[i].bs, acts[i].mtl)
+             for i, st in enumerate(self.states)], np.float64)
+        sigma = np.asarray([st.executor.sampler.sigma
+                            for st in self.states], np.float64)
+        spike_p = np.asarray([st.executor.sampler.spike_p
+                              for st in self.states], np.float64)
+        spike_mult = np.asarray([st.executor.sampler.spike_mult
+                                 for st in self.states], np.float64)
+        slo = np.asarray([st.job.slo_s for st in self.states], np.float64)
+        r = np.minimum(items_per_step, 64).astype(np.int64)
+        rng = np.random.default_rng(self.seed ^ 0x5BD1E995)
+        clock = sim.clock[:n].astype(np.float64).copy()
+        job_steps = np.zeros(n, np.int64)
+        steps_total = 0
+        active = clock < sim_time_limit
+        while active.any() and steps_total < max_steps:
+            idx = np.flatnonzero(active)
+            m = len(idx)
+            want = (sim_time_limit - clock[idx]) / means[idx]
+            n_est = np.minimum((want * 1.05).astype(np.int64) + 8,
+                               max_steps - steps_total)
+            k = int(n_est.max())
+            lats = means[idx][:, None] * np.exp(
+                rng.normal(0.0, 1.0, (m, k)) * sigma[idx][:, None])
+            lats = np.where(rng.random((m, k)) < spike_p[idx][:, None],
+                            lats * spike_mult[idx][:, None], lats)
+            colmask = np.arange(k)[None, :] < n_est[:, None]
+            starts = clock[idx][:, None] + np.cumsum(lats, axis=1) - lats
+            # a step is served iff it STARTS before the horizon; starts are
+            # monotone per row, so acceptance is a per-row prefix
+            accept = (starts < sim_time_limit) & colmask
+            n_acc = accept.sum(axis=1)
+            budget = max_steps - steps_total
+            cum = np.cumsum(n_acc)
+            if cum[-1] > budget:          # clip in job order, like the loop
+                j = int(np.argmax(cum > budget))
+                n_acc[j] = budget - (int(cum[j]) - int(n_acc[j]))
+                n_acc[j + 1:] = 0
+            tot = int(n_acc.sum())
+            if tot:
+                rmax = int(r[idx].max())
+                # one pooled request-latency draw; each job slices its rows
+                # and its first r columns (run_step's lognormal + spikes)
+                zreq = rng.normal(0.0, 1.0, (tot, rmax))
+                ureq = rng.random((tot, rmax))
+                row0 = 0
+                for pos in range(m):
+                    na = int(n_acc[pos])
+                    if na == 0:
+                        continue
+                    i = int(idx[pos])
+                    st = self.states[i]
+                    li = lats[pos, :na]
+                    ri = int(r[i])
+                    req = li[:, None] * np.exp(
+                        zreq[row0:row0 + na, :ri] * sigma[i])
+                    req = np.where(ureq[row0:row0 + na, :ri] < spike_p[i],
+                                   req * spike_mult[i], req)
+                    busy = float(li.sum())
+                    st.acc.record_bulk(items=int(items_per_step[i]) * na,
+                                       busy_s=busy,
+                                       energy_j=power_w[i] * busy,
+                                       request_latencies=req, slo=slo[i])
+                    clock[i] += busy
+                    st.executor.clock += busy
+                    job_steps[i] += na
+                    row0 += na
+                steps_total += tot
+            # a job whose whole chunk was accepted may still owe steps
+            # before the horizon; everyone else is done
+            active[idx] = (n_acc == n_est) & (clock[idx] < sim_time_limit)
+            if steps_total >= max_steps:
+                break
+        sim.clock[:n] = clock
+        sim.arrival_mark[:n] = clock
+        sim.submitted[:n] += items_per_step * job_steps
+        sim.completed[:n] += items_per_step * job_steps
+        for i, st in enumerate(self.states):
+            st.prev = acts[i]
+            sim.feasible_at_serve[i] = 1 if self._feasible_now(i) else 0
+        return steps_total
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,9 @@ class JobProfile:
     flops: float              # per-image FLOPs (sets the steady floor)
     param_bytes: float
     input_bytes: float = 600e3
+    # token-engine decode jobs only (0.0 = classic whole-request batching):
+    kv_bytes_per_item: float = 0.0   # paged-KV reservation per live slot
+    prefill_ms: float = 0.0          # prompt-processing time (the TTFT term)
 
     def steady_ms(self, dev: Device) -> float:
         comp = self.flops / (dev.peak_flops * STEADY_EFF)
@@ -259,6 +262,24 @@ def part_throughput(dev: Device, prof: JobProfile, bs: int, mtl: int, *,
                                    tenants=tenants, isolation=isolation)
 
 
+def token_latency_grid(dev: Device, prof: JobProfile, slots, mtl, *,
+                       inv_share: float = 1.0, tenants: int = 1,
+                       isolation: float = 0.0) -> np.ndarray:
+    """Decode-STEP latency (seconds) over the (live_slots, mtl) grid for a
+    continuous-batching tenant holding a 1/inv_share slice among `tenants`
+    co-residents (e.g. a co-scheduled prefill tenant).
+
+    A decode step with s live slots is a batch of s single-token requests —
+    same weight stream, same per-item host dispatch — so the step is priced
+    by the SAME calibrated law as a bs=s batch: every Table-5 / llm_profile
+    anchor carries over, and `bs` reinterpreted as max-live-slots rides the
+    existing scaler machinery unchanged.  TPOT at s slots is
+    token_latency_grid(...)[s]/1 per token per slot; TTFT adds
+    `prof.prefill_ms` and queue wait on top (the token engine's split)."""
+    return part_latency_grid(dev, prof, slots, mtl, inv_share=inv_share,
+                             tenants=tenants, isolation=isolation)
+
+
 def mt_throughput_grid(dev: Device, prof: JobProfile, bs, mtl) -> np.ndarray:
     bs_ = np.asarray(bs, np.float64)[:, None]
     m_ = np.asarray(mtl, np.float64)[None, :]
@@ -294,7 +315,10 @@ def power(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
 
 
 def fits_memory(dev: Device, prof: JobProfile, bs: int, mtl: int) -> bool:
-    per_inst = prof.param_bytes * 1.3 + bs * prof.input_bytes * 8 + 0.4e9
+    # kv_bytes_per_item charges the paged-KV budget of `bs` live decode
+    # slots; it defaults to 0.0 so classic profiles price identically
+    per_inst = (prof.param_bytes * 1.3 + bs * prof.input_bytes * 8
+                + bs * prof.kv_bytes_per_item + 0.4e9)
     return mtl * per_inst <= dev.hbm_bytes
 
 
@@ -427,13 +451,27 @@ def paper_profile(name: str, dataset: str = "imagenet") -> JobProfile:
                       input_bytes=px * px * 3 * 4.0)
 
 
+def kv_cache_bytes(cfg, seq_budget: int, dtype_bytes: int = 2) -> float:
+    """Paged-KV bytes one decode slot reserves at its full sequence budget:
+    layers x kv_heads x head_dim x 2 (K and V) x seq x dtype."""
+    return float(cfg.num_layers * cfg.num_kv_heads * cfg.head_dim
+                 * 2 * seq_budget * dtype_bytes)
+
+
 def llm_profile(cfg, mode: str = "decode", seq: int = 1024,
-                dtype_bytes: int = 2, dev: Device = TPU_V5E) -> JobProfile:
+                dtype_bytes: int = 2, dev: Device = TPU_V5E,
+                kv_seq_budget: Optional[int] = None) -> JobProfile:
     """Profile for an assigned architecture served on one TPU v5e chip-group.
 
     decode is weight-streaming bound (gpu1 ~ param_bytes/BW, amortizes fully
     with batch — the classic 'batching wins' regime); the host side is token
-    dispatch (tiny)."""
+    dispatch (tiny).
+
+    `kv_seq_budget` (token-engine decode jobs only) sets the per-slot paged
+    KV reservation charged by `fits_memory` / executor admission, and prices
+    prompt processing at that budget as `prefill_ms` (the compute-bound
+    prefill law below) — the TTFT term the token engine adds on top of
+    decode steps.  Left None, the profile is bit-identical to before."""
     n_active = cfg.active_param_count()
     if mode == "decode":
         flops = 2.0 * n_active
@@ -447,7 +485,14 @@ def llm_profile(cfg, mode: str = "decode", seq: int = 1024,
         host = 0.4
         amort = 0.3
         inp = 4.0 * seq
+    kv_item = 0.0
+    prefill_ms = 0.0
+    if kv_seq_budget is not None and mode == "decode":
+        kv_item = kv_cache_bytes(cfg, kv_seq_budget, dtype_bytes)
+        prefill_ms = (2.0 * n_active * kv_seq_budget
+                      / (dev.peak_flops * 0.5)) * 1e3 + 0.4
     return JobProfile(name=f"{cfg.name}/{mode}", host_ms=host, gpu1_ms=gpu1,
                       amort=amort, flops=flops,
                       param_bytes=cfg.param_count() * dtype_bytes,
-                      input_bytes=inp)
+                      input_bytes=inp, kv_bytes_per_item=kv_item,
+                      prefill_ms=prefill_ms)

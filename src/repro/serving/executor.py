@@ -50,6 +50,7 @@ class SimExecutor:
         self.clock = 0.0
         self._lat_cache: dict = {}     # (bs, mtl) -> mean latency (exact)
         self._power_cache: dict = {}   # (bs, mtl) -> watts (deterministic)
+        self._tok_cache: dict = {}     # (slots, mtl, prefills) -> mean step
 
     def set_partition(self, ts) -> None:
         """Resize this executor's spatial slice (MPS set-percentage / MIG
@@ -58,6 +59,7 @@ class SimExecutor:
         self.partition = ts
         self._lat_cache.clear()
         self._power_cache.clear()
+        self._tok_cache.clear()
 
     # -- pricing ------------------------------------------------------------
     def mean_latency(self, bs: int, mtl: int) -> float:
@@ -140,6 +142,47 @@ class SimExecutor:
             "throughput": items / lat,
         }
 
+    # -- token engine --------------------------------------------------------
+    def token_step_latency(self, live_slots: int, mtl: int = 1,
+                           prefill_tenants: int = 0) -> float:
+        """Mean decode-step latency with `live_slots` slots occupied.
+
+        A co-scheduled prefill ("cotenant" prefill mode) is priced as an
+        extra spatial tenant on TOP of any configured partition slice —
+        the same cross-tenant interference terms the partition model
+        calibrates against the paper's MTL curves."""
+        key = (live_slots, mtl, prefill_tenants)
+        lat = self._tok_cache.get(key)
+        if lat is None:
+            ts = self.partition
+            lat = float(dm.token_latency_grid(
+                self.device, self.profile, [live_slots], [mtl],
+                inv_share=ts.inv_share if ts is not None else 1.0,
+                tenants=(ts.tenants if ts is not None else 1)
+                + prefill_tenants,
+                isolation=ts.isolation if ts is not None else 0.0)[0, 0])
+            self._tok_cache[key] = lat
+        return lat
+
+    def run_token_step(self, live_slots: int, mtl: int = 1, *,
+                       prefill_tenants: int = 0) -> dict:
+        """Simulate one decode step: every live slot emits one token."""
+        mean = self.token_step_latency(live_slots, mtl, prefill_tenants)
+        lat = float(self.sampler.sample(mean, n=1)[0])
+        self.clock += lat
+        tokens = live_slots * mtl
+        power = self._power_cache.get((live_slots, mtl))
+        if power is None:
+            power = dm.power(self.device, self.profile, live_slots, mtl)
+            self._power_cache[(live_slots, mtl)] = power
+        return {
+            "step_time": lat,
+            "tokens": tokens,
+            "items": tokens,
+            "power_w": power,
+            "throughput": tokens / lat,
+        }
+
 
 # Default batch buckets: dense at small sizes (where the scalers live), a
 # x1.5 / x2 ladder above — every (bs * mtl) rounds UP to one of these, so a
@@ -176,7 +219,8 @@ class RealExecutor:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  donate_batch: bool = False,
                  aot: bool = True,
-                 tile_generation: Optional[Callable[[], int]] = None):
+                 tile_generation: Optional[Callable[[], int]] = None,
+                 kv_bytes_per_item: float = 0.0):
         self.fn = fn
         self.params = params
         self.make_batch = make_batch
@@ -184,6 +228,7 @@ class RealExecutor:
         self.peak_w = peak_w
         self.mem_bytes = mem_bytes
         self.act_bytes_per_item = act_bytes_per_item
+        self.kv_bytes_per_item = kv_bytes_per_item
         self.buckets = tuple(sorted(buckets))
         self.donate_batch = donate_batch
         self.aot = aot
@@ -244,12 +289,19 @@ class RealExecutor:
         """Memory-aware admission when a `mem_bytes` budget is configured
         (param bytes + per-item activation estimate at the BUCKETED batch,
         since that is the shape actually compiled); the historical hard
-        cap `bs * mtl <= 4096` when no budget is given."""
+        cap `bs * mtl <= 4096` when no budget is given.
+
+        Decode-mode profiles additionally charge the paged KV cache:
+        `kv_bytes_per_item` per LIVE slot (not bucketed — pages are
+        allocated per admitted request, the compiled bucket shape only
+        pads activations).  Without it a decode job could over-admit on
+        memory the bucket estimate never sees."""
         n = bs * mtl
         if self.mem_bytes is None:
             return n <= 4096
         need = (self.param_bytes * PARAM_OVERHEAD
-                + self.bucket(n) * self._batch_bytes_per_item())
+                + self.bucket(n) * self._batch_bytes_per_item()
+                + n * self.kv_bytes_per_item)
         return need <= self.mem_bytes
 
     # -- executable cache ---------------------------------------------------
@@ -356,3 +408,16 @@ class RealExecutor:
             "power_w": self.peak_w * 0.6,
             "throughput": items / lat,
         }
+
+    # -- token engine --------------------------------------------------------
+    def run_token_step(self, live_slots: int, mtl: int = 1, *,
+                       prefill_tenants: int = 0) -> dict:
+        """One measured decode step with `live_slots` slots occupied: the
+        jitted callable IS the decode-step function, and the bucketed AOT
+        ladder doubles as the slot ladder (a step at 37 live slots runs
+        the 48-slot executable; padding slots don't count as tokens).
+        A co-resident prefill on this single-process host shares the wall
+        clock it is measured on, so no extra pricing term is added."""
+        r = self.run_step(live_slots, mtl)
+        r["tokens"] = r["items"]
+        return r
