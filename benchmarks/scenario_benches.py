@@ -1,0 +1,141 @@
+"""Scenario-matrix benches: {steady, diurnal, flash-crowd} traffic x
+{fixed, spot} capacity x {power-packed, spread} placement, served by the
+MPS partition planner with the HybridScaler's share axis active.
+
+Each cell reports goodput, minimum per-job SLO attainment, and
+joules-per-good-request (the packing objective's currency: `pack`
+consolidates tenants onto few devices so idle floors are paid on 2 of 4
+devices; `spread` pays all 4).  The suite gates itself in-process:
+
+  * every cell holds >= ATTAIN_FLOOR minimum per-job SLO attainment;
+  * request conservation (submitted == completed + rejected + backlog)
+    holds per job in every cell — including under spot revocation, where
+    a force-killed tenant's stranded backlog moves to `rejected`;
+  * pack beats spread on joules-per-good-request at equal goodput for
+    every (traffic, capacity) pair;
+  * k uniform slices of 1/k sum to the whole-device MTL-k power draw
+    (the per-slice power model's calibration invariant);
+  * one spot+flash cell is bit-identical between the exact and
+    vectorized engines.
+
+`--check` gates the goodput rows (higher-is-better, 10%) and the jpg
+rows (lower-is-better envelope) against the committed baseline; the
+in-process asserts re-fire on every check run because check_against
+re-executes the suite function.
+"""
+
+from __future__ import annotations
+
+SEED = 3
+HORIZON_S = 240.0
+ATTAIN_FLOOR = 0.95
+# pack must beat spread on joules-per-good-request while goodput stays
+# within this relative band — "measurably fewer joules at EQUAL goodput"
+GOODPUT_BAND = 0.02
+
+
+def _cell_name(traffic: str, spot: bool, policy: str) -> str:
+    return f"scenarios/{traffic}/{'spot' if spot else 'fixed'}/{policy}"
+
+
+def bench_scenarios():
+    import numpy as np
+
+    from repro.serving import device_model as dm
+    from repro.serving.cluster import (SCENARIO_TRAFFICS,
+                                       run_scenario_cluster)
+
+    rows = []
+
+    # calibration row: k uniform tenants at share 1/k, mtl=1 sum to the
+    # whole-device MTL-k draw — spatial multiplexing at equal aggregate
+    # share burns what the paper's MTL curves burn
+    dev = dm.TESLA_P40
+    prof = dm.paper_profile("inception_v1")
+    worst = 0.0
+    for bs in (1, 4, 16, 64):
+        for k in range(1, 9):
+            total = k * dm.slice_power(dev, prof, bs, 1, share=1.0 / k,
+                                       inv_share=float(k), tenants=k)
+            whole = dm.power(dev, prof, bs, k)
+            worst = max(worst, abs(total - whole) / whole)
+    assert worst <= 1e-9, \
+        f"uniform k-slice power sum drifted from MTL-k draw: rel {worst:.2e}"
+    rows.append(("scenarios/uniform_power_sum", 0.0,
+                 f"max_rel_err={worst:.1e}"))
+
+    cells = {}
+    flash_spot_spread = None
+    for traffic in SCENARIO_TRAFFICS:
+        for spot in (False, True):
+            for policy in ("pack", "spread"):
+                rep = run_scenario_cluster(
+                    traffic, spot=spot, power_policy=policy,
+                    seed=SEED, horizon_s=HORIZON_S)
+                a = rep["aggregate"]
+                name = _cell_name(traffic, spot, policy)
+                assert a["conserved"], f"{name}: conservation broken"
+                for j in rep["per_job"]:
+                    assert j["submitted"] == (j["completed"] + j["rejected"]
+                                              + j["backlog"]), \
+                        f"{name}: job {j['job_id']} leaked requests"
+                assert not a["truncated"], f"{name}: truncated run"
+                assert a["min_attainment"] >= ATTAIN_FLOOR, \
+                    (f"{name}: min attainment {a['min_attainment']:.3f} "
+                     f"< {ATTAIN_FLOOR}")
+                jpg = a["joules_per_good_request"]
+                assert jpg is not None and np.isfinite(jpg) and jpg > 0.0
+                cells[(traffic, spot, policy)] = a
+                if (traffic, spot, policy) == ("flash", True, "spread"):
+                    flash_spot_spread = rep
+                rows.append((name, 0.0,
+                             f"goodput={a['goodput']:.1f}/s,"
+                             f"attain={a['min_attainment']:.3f},"
+                             f"jpg={jpg:.4f}J,"
+                             f"energy={a['energy_j']:.0f}J,"
+                             f"devs_powered={a['devices_powered']},"
+                             f"evac={a['preempt_evacuated']},"
+                             f"killed={a['preempt_killed']},"
+                             f"conserved={'yes' if a['conserved'] else 'NO'}"
+                             + (",truncated=1" if a.get("truncated")
+                                else "")))
+
+    # pack vs spread: fewer joules per good request at equal goodput,
+    # for every traffic shape and capacity mix
+    for traffic in SCENARIO_TRAFFICS:
+        for spot in (False, True):
+            pack = cells[(traffic, spot, "pack")]
+            spread = cells[(traffic, spot, "spread")]
+            gp, gs = pack["goodput"], spread["goodput"]
+            assert abs(gp - gs) <= GOODPUT_BAND * max(gp, gs), \
+                (f"{traffic}/spot={spot}: pack and spread goodput differ "
+                 f"{gp:.1f} vs {gs:.1f} — jpg comparison not apples-to-"
+                 f"apples")
+            jp = pack["joules_per_good_request"]
+            js = spread["joules_per_good_request"]
+            assert jp < js, \
+                (f"{traffic}/spot={spot}: pack jpg {jp:.4f} not below "
+                 f"spread jpg {js:.4f}")
+            cap = "spot" if spot else "fixed"
+            rows.append((f"scenarios/{traffic}/{cap}/pack_vs_spread", 0.0,
+                         f"jpg_ratio={jp / js:.3f},"
+                         f"joules_saved_frac={1.0 - jp / js:.3f}"))
+
+    # spot cells must actually exercise the preemption machinery
+    assert any(cells[(t, True, p)]["preemptions"] > 0
+               for t in SCENARIO_TRAFFICS for p in ("pack", "spread")), \
+        "no spot cell fired a revocation"
+    assert any(cells[(t, True, "spread")]["preempt_evacuated"] > 0
+               for t in SCENARIO_TRAFFICS), \
+        "no spread spot cell evacuated a tenant"
+
+    # exact-vs-vector conformance on the hardest cell (spot revocation
+    # mid-flash-crowd): the full report must be bit-identical
+    vec = run_scenario_cluster("flash", spot=True, power_policy="spread",
+                               seed=SEED, horizon_s=HORIZON_S,
+                               vectorized=True)
+    identical = vec == flash_spot_spread
+    assert identical, "vectorized scenario engine diverged from exact"
+    rows.append(("scenarios/exact_vs_vector", 0.0,
+                 f"bit_identical={identical}"))
+    return rows

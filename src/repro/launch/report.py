@@ -147,6 +147,27 @@ def partition_tables(reports: dict) -> str:
     return "\n".join(parts)
 
 
+def scenario_tables(reports: dict) -> str:
+    """Markdown for a scenario-matrix run ({cell: ClusterEngine report},
+    the structure examples/scenario_matrix.py dumps): goodput, minimum
+    per-job SLO attainment, and the energy column the power-packing
+    objective moves (joules per good request)."""
+    parts = ["| cell | goodput | min attain | J/good req | energy | "
+             "devices powered | evacuated | killed | conserved |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for cell, rep in reports.items():
+        a = rep["aggregate"]
+        jpg = a.get("joules_per_good_request")
+        parts.append(
+            f"| {cell} | {a['goodput']:.1f}/s | "
+            f"{a['min_attainment']:.3f} | "
+            f"{f'{jpg:.4f}J' if jpg is not None else '—'} | "
+            f"{a['energy_j']:.0f}J | {a['devices_powered']} | "
+            f"{a['preempt_evacuated']} | {a['preempt_killed']} | "
+            f"{'yes' if a['conserved'] else 'NO'} |")
+    return "\n".join(parts)
+
+
 def profile_store_tables(store) -> str:
     """Markdown summary of a cross-run profile store: what knowledge the
     next run starts with (tuned tiles + generation, persisted surface
@@ -215,6 +236,8 @@ def main() -> None:
                     help="cluster_churn.py --json output to tabulate")
     ap.add_argument("--partition", default=None,
                     help="partition_serve.py --json output to tabulate")
+    ap.add_argument("--scenarios", default=None,
+                    help="scenario_matrix.py --json output to tabulate")
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="cross-run profile store dir to summarize "
                          "(perf.profile_store)")
@@ -266,6 +289,10 @@ def main() -> None:
         parts.append("\n### Spatial partitioning — heterogeneous shares "
                      "vs uniform multi-tenancy\n")
         parts.append(partition_tables(json.load(open(args.partition))))
+    if args.scenarios and os.path.exists(args.scenarios):
+        parts.append("\n### Scenario matrix — traffic shape x spot "
+                     "capacity x power packing\n")
+        parts.append(scenario_tables(json.load(open(args.scenarios))))
     if args.store:
         from repro.perf.profile_store import ProfileStore
         parts.append("\n### Cross-run profile store\n")

@@ -118,6 +118,23 @@ def main() -> None:
                     choices=["cotenant", "timeslice"],
                     help="prefill priced as a co-resident tenant vs "
                          "time-sliced on the decode tenant")
+    ap.add_argument("--scenarios", action="store_true",
+                    help="one scenario-matrix cell: time-varying traffic "
+                         "x spot capacity x power packing on the MPS "
+                         "partition planner (see "
+                         "serving.cluster.run_scenario_cluster)")
+    ap.add_argument("--scenario-traffic", default="steady",
+                    choices=["steady", "diurnal", "flash"],
+                    help="traffic shape for --scenarios: constant, "
+                         "compressed diurnal swing, or a 3x flash crowd")
+    ap.add_argument("--spot", action="store_true",
+                    help="--scenarios: mark one device preemptible and "
+                         "revoke it once mid-run (grace window, restore)")
+    ap.add_argument("--power-policy", default=None,
+                    choices=["pack", "spread"],
+                    help="--scenarios placement objective: consolidate "
+                         "tenants to power-gate idle devices, or spread "
+                         "for headroom (default: legacy scoring)")
     ap.add_argument("--partition", action="store_true",
                     help="spatial partitioning (MPS/MIG-style slices): "
                          "serve the mixed small/large trace with the "
@@ -174,9 +191,10 @@ def main() -> None:
             # must come from the SAME document the rows live in
             autotune.configure(cache_dir=args.profile_store)
 
-    if args.record and not (args.cluster or args.churn or args.partition):
+    if args.record and not (args.cluster or args.churn or args.partition
+                            or args.scenarios):
         ap.error("--record applies to --cluster / --churn / --partition "
-                 "runs only")
+                 "/ --scenarios runs only")
 
     def warn_truncated(agg: dict) -> None:
         # satellite of the max_steps bugfix: a truncated run used to look
@@ -224,6 +242,48 @@ def main() -> None:
             ratio = (reports["continuous"]["goodput_tokens_s"]
                      / max(reports["static"]["goodput_tokens_s"], 1e-9))
             print(f"  continuous/static goodput ratio: {ratio:.2f}x")
+        return
+
+    if args.scenarios:
+        from repro.serving.cluster import run_scenario_cluster
+        if args.controller not in ("dnnscaler", "hybrid"):
+            ap.error("--scenarios supports --controller dnnscaler or "
+                     "hybrid")
+        mode = "hybrid" if args.controller == "hybrid" else "auto"
+        rep = run_scenario_cluster(
+            args.scenario_traffic, spot=args.spot,
+            power_policy=args.power_policy,
+            n_devices=args.devices or 4,
+            horizon_s=args.seconds or 150.0, mode=mode, seed=args.seed,
+            vectorized=args.vectorized,
+            record=args.record, record_store=store)
+        agg = rep["aggregate"]
+        warn_truncated(agg)
+        assert agg["conserved"], "request conservation violated"
+        cap = "spot" if args.spot else "fixed"
+        jpg = agg["joules_per_good_request"]
+        print(f"scenario[{args.scenario_traffic}/{cap}/"
+              f"{args.power_policy or 'legacy'}]: {agg['jobs']} tenancies "
+              f"on {agg['devices']} devices — goodput {agg['goodput']:.1f}"
+              f"/s, min attainment {agg['min_attainment']:.3f}, "
+              f"conservation OK")
+        print(f"  energy {agg['energy_j']:.0f}J (idle "
+              f"{agg['idle_energy_j']:.0f}J + dynamic "
+              f"{agg['dynamic_energy_j']:.0f}J) on "
+              f"{agg['devices_powered']} powered devices — "
+              + (f"{jpg:.4f} J per good request" if jpg is not None
+                 else "no good requests"))
+        if args.spot:
+            print(f"  {agg['preemptions']} revocations: "
+                  f"{agg['preempt_evacuated']} tenants evacuated, "
+                  f"{agg['preempt_killed']} force-killed at the grace "
+                  f"deadline")
+        for r in rep["per_job"]:
+            share = f"{r['share']:.3f}" if r["share"] is not None else "—"
+            flags = "".join(("P" if r["preempted"] else "",
+                             "M" if r["migrations"] else ""))
+            print(f"  job {r['job_id']:>5} {r['dnn']:<26} share {share:>6} "
+                  f"attain {r['slo_attainment']:.3f} {flags}")
         return
 
     if args.partition:

@@ -54,6 +54,9 @@ class Device:
     hbm_bytes: float
     idle_w: float
     peak_w: float
+    # preemptible (spot) capacity: the provider may revoke the device with a
+    # grace-window deadline mid-run (workload.Preemption drives the event)
+    spot: bool = False
 
     def share(self, frac: float) -> "Device":
         return dataclasses.replace(
@@ -307,11 +310,37 @@ def best_feasible_point(latency_s, bs_values, mtl_values,
     return float(thr[i, j]), int(bs_values[i]), int(mtl_values[j])
 
 
-def power(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
-    lat = mt_latency(dev, prof, bs, mtl)
-    gpu_busy = bs * gpu_img_ms(prof, bs, dev) * mtl / 1e3
+def slice_power(dev: Device, prof: JobProfile, bs: int, mtl: int, *,
+                share: float = 1.0, inv_share: Optional[float] = None,
+                tenants: int = 1, isolation: float = 0.0) -> float:
+    """Power draw (watts) attributed to ONE tenant slice of `dev`.
+
+    The slice owns `share` of the device, so it draws `share` of the idle
+    floor plus `share` of the dynamic range scaled by its own GPU-busy
+    fraction — a co-resident's draw is its co-resident's business, so
+    summing slice_power across tenants no longer multi-counts the device.
+    `inv_share`/`tenants`/`isolation` price the busy fraction on the
+    partitioned latency law (part_latency); with the defaults this is the
+    whole-device formula bit-for-bit (share=1 multiplies by exactly 1.0).
+
+    Invariant (pinned in tests): k uniform tenants at share=1/k, mtl=1,
+    isolation=0 sum to power(dev, prof, bs, k) — spatial multiplexing at
+    equal aggregate share burns what the paper's MTL curves burn.
+    """
+    if inv_share is not None and (inv_share != 1.0 or tenants > 1):
+        lat = part_latency(dev, prof, bs, mtl, inv_share=inv_share,
+                           tenants=tenants, isolation=isolation)
+        gpu_busy = bs * gpu_img_ms(prof, bs, dev) * inv_share * mtl / 1e3
+    else:
+        lat = mt_latency(dev, prof, bs, mtl)
+        gpu_busy = bs * gpu_img_ms(prof, bs, dev) * mtl / 1e3
     util = min(1.0, gpu_busy / max(lat, 1e-9))
-    return dev.idle_w + (dev.peak_w - dev.idle_w) * util
+    return share * (dev.idle_w + (dev.peak_w - dev.idle_w) * util)
+
+
+def power(dev: Device, prof: JobProfile, bs: int, mtl: int) -> float:
+    """Whole-device power draw (watts) — slice_power at full share."""
+    return slice_power(dev, prof, bs, mtl)
 
 
 def fits_memory(dev: Device, prof: JobProfile, bs: int, mtl: int) -> bool:

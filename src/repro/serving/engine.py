@@ -60,7 +60,8 @@ class OpenLoopQueue:
 
     def __init__(self, rate_fn: Callable[[float], float], *,
                  max_queue: int, seed: int = 0,
-                 piecewise_s: Optional[float] = None):
+                 piecewise_s: Optional[float] = None,
+                 step_breaks: Optional[Callable] = None):
         self.rate_fn = rate_fn
         self.rng = np.random.default_rng(seed)
         self.queue: list = []            # arrival timestamps
@@ -74,6 +75,14 @@ class OpenLoopQueue:
         # one sample at win_start.  None keeps the single-point product,
         # which is exact for constant rates (the cluster queues).
         self.piecewise_s = piecewise_s
+        # registered step rate: rate_fn is piecewise-CONSTANT and
+        # step_breaks(a, b) returns its jump points inside (a, b), sorted
+        # ascending.  The integral is then an exact left-Riemann sum with
+        # knots snapped at the discontinuities — the trapezoid above
+        # averages the high/low rates on any sub-interval straddling a
+        # jump, mispricing every burst edge (systematic under flash-crowd
+        # traces).  Takes precedence over piecewise_s.
+        self.step_breaks = step_breaks
 
     @property
     def backlog(self) -> int:
@@ -87,8 +96,20 @@ class OpenLoopQueue:
         rate * window product, bit-identical to the legacy single-point
         path."""
         window = max(a_end - win_start, 0.0)
-        if self.piecewise_s is None or window <= 0.0:
+        if window <= 0.0 or (self.piecewise_s is None
+                             and self.step_breaks is None):
             return self.rate_fn(win_start) * window
+        if self.step_breaks is not None:
+            # exact integral of a registered piecewise-constant rate: each
+            # segment between jump points is priced at its left endpoint
+            knots = [win_start]
+            for b in self.step_breaks(win_start, a_end):
+                b = float(b)
+                if win_start < b < a_end:
+                    knots.append(b)
+            knots.append(a_end)
+            return float(sum(float(self.rate_fn(lo)) * (hi - lo)
+                             for lo, hi in zip(knots, knots[1:])))
         seg = max(float(self.piecewise_s), 1e-12)
         n = max(int(np.ceil(window / seg)), 1)
         knots = np.linspace(win_start, a_end, n + 1)
@@ -207,12 +228,12 @@ class OpenLoopEngine(ServingEngine):
         self.arrival_rate = arrival_rate
         self.burst_factor = burst_factor
         self.burst_period_s = burst_period_s
-        # bursty rates integrate piecewise (knots well inside one burst
-        # period, so the 30%-phase boundary is always resolved); constant
+        # the burst rate is piecewise-constant with known jump points, so
+        # it registers them for the exact left-Riemann integral; constant
         # rates keep the exact single-point product
         self.oq = OpenLoopQueue(
             self._rate, max_queue=max_queue, seed=seed,
-            piecewise_s=(burst_period_s / 8.0 if burst_factor > 1.0
+            step_breaks=(self._burst_breaks if burst_factor > 1.0
                          else None))
 
     # backwards-compatible views over the shared queue helper
@@ -233,6 +254,19 @@ class OpenLoopEngine(ServingEngine):
             return self.arrival_rate
         phase = (t % self.burst_period_s) / self.burst_period_s
         return self.arrival_rate * (self.burst_factor if phase < 0.3 else 1.0)
+
+    def _burst_breaks(self, a: float, b: float) -> list:
+        """Jump points of _rate inside (a, b): m*period (burst on) and
+        (m + 0.3)*period (burst off) for every period m the window spans."""
+        period = self.burst_period_s
+        out = []
+        t = np.floor(a / period) * period
+        while t <= b:
+            for x in (t, t + 0.3 * period):
+                if a < x < b:
+                    out.append(x)
+            t += period
+        return out
 
     def run(self, controller, *, max_steps: int = 2000,
             sim_time_limit=None) -> RunAccumulator:

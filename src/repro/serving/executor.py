@@ -41,15 +41,16 @@ class SimExecutor:
 
     def __init__(self, profile: dm.JobProfile, device: dm.Device = dm.TESLA_P40,
                  seed: int = 0, mesh_shape: Optional[tuple] = None,
-                 partition=None):
+                 partition=None, power_share: float = 1.0):
         self.profile = profile
         self.device = device
         self.sampler = dm.LatencySampler(seed=seed)
         self.mesh_shape = mesh_shape   # TPU mode: tenancy = submesh split
         self.partition = partition     # TenantSlice: spatial slice pricing
+        self.power_share = power_share  # time-share fraction for power pricing
         self.clock = 0.0
         self._lat_cache: dict = {}     # (bs, mtl) -> mean latency (exact)
-        self._power_cache: dict = {}   # (bs, mtl) -> watts (deterministic)
+        self._power_cache: dict = {}   # (bs, mtl) -> (total_w, dynamic_w)
         self._tok_cache: dict = {}     # (slots, mtl, prefills) -> mean step
 
     def set_partition(self, ts) -> None:
@@ -123,6 +124,33 @@ class SimExecutor:
                 dev, hbm_bytes=dev.hbm_bytes * self.partition.mem_fraction)
         return dm.fits_memory(dev, self.profile, bs, mtl)
 
+    def power_terms(self, bs: int, mtl: int) -> tuple:
+        """(total_w, dynamic_w) this executor's slice draws at (bs, mtl).
+
+        Per-slice pricing (device_model.slice_power): a partitioned tenant
+        draws its share of the idle floor plus share-scaled dynamic power on
+        the partition latency law; a time-share tenant draws power_share of
+        both.  dynamic_w = total_w - share * idle_w lets the cluster charge
+        the idle floor ONCE per powered device instead of once per tenant.
+        """
+        key = (bs, mtl)
+        terms = self._power_cache.get(key)
+        if terms is None:
+            ts = self.partition
+            if ts is not None:
+                share = ts.share
+                total = dm.slice_power(self.device, self.profile, bs, mtl,
+                                       share=share, inv_share=ts.inv_share,
+                                       tenants=ts.tenants,
+                                       isolation=ts.isolation)
+            else:
+                share = self.power_share
+                total = dm.slice_power(self.device, self.profile, bs, mtl,
+                                       share=share)
+            terms = (total, total - share * self.device.idle_w)
+            self._power_cache[key] = terms
+        return terms
+
     # -- execution ----------------------------------------------------------
     def run_step(self, bs: int, mtl: int) -> dict:
         """Simulate one synchronized step of all MTL instances."""
@@ -130,15 +158,13 @@ class SimExecutor:
         lat = float(self.sampler.sample(mean, n=1)[0])
         self.clock += lat
         items = bs * mtl
-        power = self._power_cache.get((bs, mtl))
-        if power is None:
-            power = dm.power(self.device, self.profile, bs, mtl)
-            self._power_cache[(bs, mtl)] = power
+        power, dyn = self.power_terms(bs, mtl)
         return {
             "step_time": lat,
             "items": items,
             "request_latencies": self.sampler.sample(lat, n=min(items, 64)),
             "power_w": power,
+            "dynamic_power_w": dyn,
             "throughput": items / lat,
         }
 
@@ -171,15 +197,13 @@ class SimExecutor:
         lat = float(self.sampler.sample(mean, n=1)[0])
         self.clock += lat
         tokens = live_slots * mtl
-        power = self._power_cache.get((live_slots, mtl))
-        if power is None:
-            power = dm.power(self.device, self.profile, live_slots, mtl)
-            self._power_cache[(live_slots, mtl)] = power
+        power, dyn = self.power_terms(live_slots, mtl)
         return {
             "step_time": lat,
             "tokens": tokens,
             "items": tokens,
             "power_w": power,
+            "dynamic_power_w": dyn,
             "throughput": tokens / lat,
         }
 
@@ -406,6 +430,7 @@ class RealExecutor:
             "partition_slowdown": slowdown,
             "request_latencies": np.full(min(items, 64), lat),
             "power_w": self.peak_w * 0.6,
+            "dynamic_power_w": max(self.peak_w * 0.6 - self.idle_w, 0.0),
             "throughput": items / lat,
         }
 

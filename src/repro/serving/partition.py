@@ -242,6 +242,23 @@ def share_ladder(kind: str = "mps",
     raise ValueError(f"unknown kind {kind!r}")
 
 
+def packing_key(policy: Optional[str], *, occupied: bool,
+                fill: float) -> tuple:
+    """Device-ordering key fragment for the consolidate-vs-spread packing
+    objective (ClusterEngine's `power_policy`).
+
+    "pack" prefers already-powered devices, fullest first — admissions
+    consolidate onto few devices so the rest stay power-gated (zero idle
+    floor) at trough.  "spread" prefers empty devices, emptiest first —
+    tail latency over joules at peak.  None returns the empty tuple, so
+    legacy score tuples are byte-identical when no policy is set."""
+    if policy == "pack":
+        return (0 if occupied else 1, -fill)
+    if policy == "spread":
+        return (1 if occupied else 0, fill)
+    return ()
+
+
 def mig_step_down(share: float) -> Optional[float]:
     """The largest MIG compute fraction STRICTLY below `share`, or None
     when the share already sits at (or below) the smallest profile —

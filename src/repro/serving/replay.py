@@ -31,7 +31,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.serving import device_model as dm
-from repro.serving.workload import ChurnJob, Job
+from repro.serving.workload import ChurnJob, Job, Preemption
 
 TRACE_SECTION = "traces"
 TRACE_VERSION = 1
@@ -64,13 +64,15 @@ def deserialize_job(d: dict) -> Job:
 
 def serialize_churn(e: ChurnJob) -> dict:
     return {"job": serialize_job(e.job), "admit_s": e.admit_s,
-            "depart_s": e.depart_s, "arrival_rate": e.arrival_rate}
+            "depart_s": e.depart_s, "arrival_rate": e.arrival_rate,
+            "traffic": _plain(e.traffic)}
 
 
 def deserialize_churn(d: dict) -> ChurnJob:
     return ChurnJob(job=deserialize_job(d["job"]),
                     admit_s=d["admit_s"], depart_s=d["depart_s"],
-                    arrival_rate=d["arrival_rate"])
+                    arrival_rate=d["arrival_rate"],
+                    traffic=d.get("traffic"))
 
 
 def serialize_spec(spec) -> dict:
@@ -155,10 +157,29 @@ def replay_run(trace: dict, *, policy: str = "baseline",
     entry = meta.get("entry", "churn")
     mode = meta.get("mode", "hybrid")
     cpolicy = meta.get("policy")
+    power_policy = kw.get("power_policy")
+    prees = [Preemption(**p) for p in (kw.get("preemptions") or [])] or None
     if policy == "fewer-devices":
         fleet = _fewer(fleet)
+        if prees:       # revocations of devices the cut removed are moot
+            prees = [p for p in prees if p.device < len(fleet)] or None
     if policy == "uniform-mtl" and entry != "partition":
         mode = "MT"            # uniform multi-tenancy instead of hybrid
+    if entry == "scenario":
+        if policy == "mig":
+            # the same scenario (traffic shapes + revocations travel with
+            # the churn entries / preemption kwargs) on MIG-grid discrete
+            # slices instead of MPS fractional shares
+            return cl.run_partition_cluster(
+                "het-mig", trace=churn, fleet=fleet, horizon_s=horizon,
+                mode=mode, seed=seed, profile_store=profile_store,
+                power_policy=power_policy, preemptions=prees,
+                vectorized=vectorized)
+        return cl.run_scenario_cluster(
+            meta.get("traffic", "steady"), spot=bool(meta.get("spot")),
+            power_policy=power_policy, fleet=fleet, horizon_s=horizon,
+            max_mtl=int(meta.get("max_mtl", 2)), mode=mode, seed=seed,
+            vectorized=vectorized, trace=churn, preemptions=prees)
     if policy == "mig" or entry == "partition":
         part_policy = ("het-mig" if policy == "mig"
                        else ("uniform" if policy == "uniform-mtl"
@@ -167,6 +188,7 @@ def replay_run(trace: dict, *, policy: str = "baseline",
         return cl.run_partition_cluster(
             part_policy, trace=entries, fleet=fleet, horizon_s=horizon,
             mode=mode, seed=seed, profile_store=profile_store,
+            power_policy=power_policy, preemptions=prees,
             vectorized=vectorized)
     if entry == "paper":
         rates = kw.get("arrival_rates") or None
@@ -178,6 +200,7 @@ def replay_run(trace: dict, *, policy: str = "baseline",
     return cl.run_churn_cluster(
         cpolicy or "dynamic", trace=churn, fleet=fleet, horizon_s=horizon,
         mode=mode, seed=seed, profile_store=profile_store,
+        power_policy=power_policy, preemptions=prees,
         vectorized=vectorized)
 
 

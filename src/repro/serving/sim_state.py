@@ -47,6 +47,9 @@ _FLOAT_FIELDS = (
 )
 _INT_FIELDS = (
     "epoch", "migrations", "resizes", "submitted", "completed", "backlog",
+    # spot revocation: 1 once the job was force-killed at a grace-window
+    # deadline (its stranded backlog moved to rejected, not dropped)
+    "preempted",
 )
 _BOOL_FIELDS = ("active",)
 

@@ -115,6 +115,95 @@ class ChurnJob:
     admit_s: float = 0.0
     depart_s: Optional[float] = None
     arrival_rate: Optional[float] = None
+    # declarative time-varying traffic over the nominal arrival_rate (which
+    # stays the mean-rate the packer scores against): a plain dict so churn
+    # traces remain JSON-serializable for replay.  See `make_rate_fn` for
+    # the supported kinds ("diurnal", "flash"); None = constant rate.
+    traffic: Optional[dict] = None
+
+
+def make_rate_fn(base_rate: Optional[float], traffic: Optional[dict]):
+    """Compile a ChurnJob's declarative `traffic` spec into the arrival
+    machinery: returns ``(rate_fn, piecewise_s, step_breaks)`` for
+    `OpenLoopQueue`.
+
+    - None / {"kind": "steady"}: constant `base_rate` — the exact
+      single-point integral, bit-identical to the legacy constant path.
+    - {"kind": "diurnal", "period_s", "peak_mult", "trough_mult",
+      "phase_s"}: smooth cosine day/night swing between trough_mult and
+      peak_mult x base_rate (trough at phase_s, peak half a period later);
+      integrated by trapezoid over period/16 knots.
+    - {"kind": "flash", "at_s", "duration_s", "mult"}: flash crowd — a
+      step to mult x base_rate over [at_s, at_s + duration_s); the jump
+      points are REGISTERED so the integral is exact left-Riemann (the
+      trapezoid would smear the spike edges; see OpenLoopQueue).
+    """
+    if base_rate is None or traffic is None:
+        return (lambda t, r=base_rate: r), None, None
+    kind = traffic.get("kind", "steady")
+    if kind == "steady":
+        return (lambda t, r=base_rate: r), None, None
+    if kind == "diurnal":
+        period = float(traffic.get("period_s", 86_400.0))
+        peak = float(traffic.get("peak_mult", 2.0))
+        trough = float(traffic.get("trough_mult", 0.5))
+        phase = float(traffic.get("phase_s", 0.0))
+
+        def rate_fn(t, r=base_rate):
+            u = 0.5 * (1.0 - np.cos(2.0 * np.pi * (t - phase) / period))
+            return r * (trough + (peak - trough) * float(u))
+
+        return rate_fn, period / 16.0, None
+    if kind == "flash":
+        at = float(traffic.get("at_s", 0.0))
+        dur = float(traffic.get("duration_s", 10.0))
+        mult = float(traffic.get("mult", 4.0))
+
+        def rate_fn(t, r=base_rate):
+            return r * (mult if at <= t < at + dur else 1.0)
+
+        def step_breaks(a, b):
+            return [x for x in (at, at + dur) if a < x < b]
+
+        return rate_fn, None, step_breaks
+    raise ValueError(f"unknown traffic kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Preemptible (spot) capacity: revocation events over the fleet.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Preemption:
+    """One spot-capacity revocation: device index `device` is revoked at
+    `at_s`; residents get a `grace_s` evacuation window (migrate out, or
+    serve down until the deadline and lose the remaining backlog).
+    `restore_s` optionally returns the device to the placement pool."""
+
+    device: int
+    at_s: float
+    grace_s: float = 10.0
+    restore_s: Optional[float] = None
+
+
+def spot_revocation_trace(fleet: Sequence, *, horizon_s: float,
+                          grace_s: float = 10.0, restore: bool = True,
+                          seed: int = 0) -> List[Preemption]:
+    """One revocation per spot-flagged device, at a time sampled from the
+    middle 60% of the horizon; restored (if `restore`) after ~15% of the
+    horizon off — the churn shape of a preemptible capacity pool."""
+    rng = np.random.default_rng(seed)
+    out: List[Preemption] = []
+    for d, spec in enumerate(fleet):
+        dev = getattr(spec, "device", spec)
+        if not getattr(dev, "spot", False):
+            continue
+        at = float(rng.uniform(0.2 * horizon_s, 0.8 * horizon_s))
+        back = at + grace_s + 0.15 * horizon_s
+        out.append(Preemption(
+            device=d, at_s=at, grace_s=grace_s,
+            restore_s=(back if restore and back < horizon_s else None)))
+    out.sort(key=lambda p: p.at_s)
+    return out
 
 
 def steady_capacity(job: Job, *, share: float = 1.0,
@@ -209,5 +298,63 @@ def churn_trace(*, horizon_s: float = 150.0, n_initial: int = 4,
         depart = admit + life if admit + life < horizon_s else None
         trace.append(ChurnJob(job=job, admit_s=admit, depart_s=depart,
                               arrival_rate=load * steady_capacity(job)))
+    trace.sort(key=lambda e: e.admit_s)
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Scenario matrix traces: {steady, diurnal, flash} x {fixed, spot} cells.
+# ---------------------------------------------------------------------------
+def scenario_traffic_spec(traffic: str, *, horizon_s: float) -> Optional[dict]:
+    """The per-kind traffic dict used by `scenario_trace`: one diurnal
+    "day" is compressed onto the horizon (trough at t=0, peak mid-run);
+    the flash crowd is a 3x step over ~7% of the horizon just past the
+    midpoint.  Steady returns None (constant rate)."""
+    if traffic == "steady":
+        return None
+    if traffic == "diurnal":
+        return {"kind": "diurnal", "period_s": horizon_s,
+                "peak_mult": 1.5, "trough_mult": 0.45, "phase_s": 0.0}
+    if traffic == "flash":
+        return {"kind": "flash", "at_s": 0.55 * horizon_s,
+                "duration_s": 0.07 * horizon_s, "mult": 3.0}
+    raise ValueError(f"unknown scenario traffic {traffic!r}")
+
+
+def scenario_trace(traffic: str = "steady", *, horizon_s: float = 90.0,
+                   n_jobs: int = 6, load: float = 0.05,
+                   seed: int = 0) -> List[ChurnJob]:
+    """One cell-trace of the scenario matrix: `n_jobs` light tenants (the
+    mobile-net pool — textclassif/imdb is excluded because its base
+    latency exceeds its own SLO, so no placement could ever attain it)
+    whose Poisson rates follow the `traffic` kind.
+
+    Most tenants span the whole horizon; one departs early and one arrives
+    late, so the consolidate-vs-spread packing objective has empty devices
+    to power-gate at trough and fresh admissions to place at peak.  Rates
+    are `load` x the SLO-feasible capacity on a quarter slice —
+    `steady_capacity` prices a LONE tenant, so `load` must also absorb
+    the co-tenant interference of a packed device plus the flash-crowd
+    3x peak while keeping >= 0.95 attainment (the BENCH_scenarios gate);
+    0.05 holds that with margin on a 4-way packed P40."""
+    rng = np.random.default_rng(seed)
+    light_pool = [j for j in PAPER_JOBS
+                  if j.dnn in ("mobilenet_v1_025", "mobilenet_v1_05")]
+    spec = scenario_traffic_spec(traffic, horizon_s=horizon_s)
+    trace: List[ChurnJob] = []
+    for k in range(n_jobs):
+        base = light_pool[int(rng.integers(len(light_pool)))]
+        job = dataclasses.replace(base, job_id=3000 + k)
+        admit, depart = 0.0, None
+        if k == n_jobs - 2:
+            depart = 0.40 * horizon_s     # frees capacity mid-run ...
+        elif k == n_jobs - 1:
+            admit = 0.50 * horizon_s      # ... which the late arrival can
+            #                               take whole (under "spread") just
+            #                               before the flash crowd lands
+        trace.append(ChurnJob(
+            job=job, admit_s=admit, depart_s=depart,
+            arrival_rate=load * steady_capacity(job, share=0.25),
+            traffic=spec))
     trace.sort(key=lambda e: e.admit_s)
     return trace

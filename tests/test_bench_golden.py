@@ -60,6 +60,40 @@ def test_partition_bench_matches_committed_baseline():
 
 
 @pytest.mark.slow
+def test_scenarios_bench_matches_committed_baseline():
+    """The scenario matrix is pinned like cluster/churn/partition: its
+    deterministic goodput rows and lower-is-better jpg rows must hold
+    against BENCH_scenarios.json, and the committed baseline itself must
+    already show the matrix properties — every cell >= 0.95 attainment,
+    conserved, and power-packed cells measurably cheaper per good request
+    than spread at equal goodput."""
+    committed = _committed("scenarios")
+    rows = {r["name"]: _parse_metrics(r["derived"])
+            for r in committed["rows"]}
+    cells = {n: m for n, m in rows.items()
+             if "attain" in m and "jpg" in m}
+    assert len(cells) == 12                     # 3 traffics x 2 x 2
+    for name, m in cells.items():
+        assert m["attain"] >= 0.95, name
+        assert "conserved=yes" in next(
+            r["derived"] for r in committed["rows"] if r["name"] == name)
+    for traffic in ("steady", "diurnal", "flash"):
+        for cap in ("fixed", "spot"):
+            pack = cells[f"scenarios/{traffic}/{cap}/pack"]
+            spread = cells[f"scenarios/{traffic}/{cap}/spread"]
+            assert pack["jpg"] < spread["jpg"]
+            assert abs(pack["goodput"] - spread["goodput"]) \
+                <= 0.02 * spread["goodput"]
+    # the exact-vs-vector conformance row must be present and passing
+    assert any(r["name"] == "scenarios/exact_vs_vector"
+               and "bit_identical=True" in r["derived"]
+               for r in committed["rows"])
+    # re-running the suite (with its in-process asserts) must hold within
+    # the same gate CI applies
+    assert check_against(REPO, tol=0.10, only={"scenarios"}) == 0
+
+
+@pytest.mark.slow
 def test_kernels_bench_matches_committed_baseline(tmp_path):
     """The kernels suite is gated too (closing the 'only cluster/churn
     are pinned' gap): its deterministic pallas-vs-reference `maxerr=`

@@ -1,0 +1,365 @@
+"""Scenario-matrix subsystem tests: the per-slice power model's
+calibration properties, consolidate-vs-spread energy accounting, spot
+revocation (evacuation, grace windows, forced kills) with request
+conservation in both engines, time-varying traffic integrals, and the
+scenario record -> replay round trip."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.controller import StaticController
+from repro.perf.profile_store import ProfileStore
+from repro.serving import device_model as dm
+from repro.serving import replay as rp
+from repro.serving.cluster import (ClusterEngine, DeviceSpec,
+                                   VectorClusterEngine, gpu_fleet,
+                                   run_churn_cluster, run_scenario_cluster,
+                                   spot_fleet)
+from repro.serving.engine import OpenLoopQueue
+from repro.serving.workload import (PAPER_JOBS, ChurnJob, Preemption,
+                                    make_rate_fn, scenario_trace,
+                                    spot_revocation_trace)
+
+DEV = dm.TESLA_P40
+PROF = dm.paper_profile("inception_v1")
+
+
+def _static_factory(bs=1, mtl=1):
+    return lambda job, executor: StaticController(bs=bs, mtl=mtl)
+
+
+def _tenant(k, admit=0.0, depart=None, rate=50.0, jid_base=700):
+    base = PAPER_JOBS[0]
+    return ChurnJob(job=dataclasses.replace(base, job_id=jid_base + k),
+                    admit_s=admit, depart_s=depart, arrival_rate=rate)
+
+
+def _assert_conserved(rep):
+    for r in rep["per_job"]:
+        assert r["submitted"] == (r["completed"] + r["rejected"]
+                                  + r["backlog"]), r
+    assert rep["aggregate"]["conserved"]
+
+
+# ---------------------------------------------------------------------------
+# per-slice power model properties
+# ---------------------------------------------------------------------------
+def test_slice_power_full_share_is_whole_device_power():
+    for bs in (1, 4, 16, 64):
+        for mtl in (1, 2, 4):
+            assert dm.slice_power(DEV, PROF, bs, mtl) \
+                == dm.power(DEV, PROF, bs, mtl)
+
+
+def test_slice_power_monotone_in_share():
+    shares = (0.125, 0.25, 0.375, 0.5, 0.75, 1.0)
+    for bs in (1, 8, 32):
+        draws = [dm.slice_power(DEV, PROF, bs, 1, share=s,
+                                inv_share=1.0 / s, tenants=2)
+                 for s in shares]
+        assert all(b >= a - 1e-12 for a, b in zip(draws, draws[1:])), draws
+
+
+def test_step_energy_monotone_in_bs():
+    """Energy PER STEP (power x step latency) grows with batch size: a
+    bigger batch holds the device busy longer at no lower draw."""
+    bs = (1, 2, 4, 8, 16, 32, 64, 128)
+    for mtl in (1, 2, 4):
+        e = [dm.power(DEV, PROF, b, mtl) * dm.mt_latency(DEV, PROF, b, mtl)
+             for b in bs]
+        assert all(y >= x - 1e-12 for x, y in zip(e, e[1:])), e
+
+
+def test_power_monotone_in_mtl():
+    for bs in (1, 8, 32):
+        draws = [dm.power(DEV, PROF, bs, m) for m in range(1, 11)]
+        assert all(b >= a - 1e-12 for a, b in zip(draws, draws[1:])), draws
+
+
+def test_uniform_slices_sum_to_whole_device_power():
+    """k uniform tenants at share 1/k, mtl=1 sum to the MTL-k whole-device
+    draw — the calibration invariant slice_power pins: spatial
+    multiplexing at equal aggregate share burns what MTL burns."""
+    for bs in (1, 4, 16, 64):
+        for k in range(1, 9):
+            total = k * dm.slice_power(DEV, PROF, bs, 1, share=1.0 / k,
+                                       inv_share=float(k), tenants=k)
+            whole = dm.power(DEV, PROF, bs, k)
+            assert abs(total - whole) <= 1e-9 * whole, (bs, k)
+
+
+def test_power_bounded_by_idle_and_peak():
+    for bs in (1, 16, 128):
+        for share in (0.25, 1.0):
+            w = dm.slice_power(DEV, PROF, bs, 1, share=share,
+                               inv_share=1.0 / share, tenants=2)
+            assert share * DEV.idle_w - 1e-12 <= w \
+                <= share * DEV.peak_w + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# cluster-level energy accounting: idle floor once per powered device,
+# power-gated (never-resident) devices draw nothing
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_pack_gates_idle_devices_and_energy_decomposes():
+    pack = run_scenario_cluster("steady", power_policy="pack",
+                                seed=3, horizon_s=80.0)["aggregate"]
+    spread = run_scenario_cluster("steady", power_policy="spread",
+                                  seed=3, horizon_s=80.0)["aggregate"]
+    # pack consolidates 4-6 light tenants onto a subset of the 4 devices;
+    # spread pays the idle floor everywhere
+    assert pack["devices_powered"] < spread["devices_powered"] == 4
+    for a in (pack, spread):
+        assert a["energy_j"] == pytest.approx(
+            a["idle_energy_j"] + a["dynamic_energy_j"], rel=1e-12)
+        # the idle floor is charged at most once per powered device:
+        # total powered seconds can never exceed devices_powered x makespan
+        assert a["device_powered_s"] \
+            <= a["devices_powered"] * a["makespan_s"] + 1e-6
+        assert a["idle_energy_j"] \
+            <= DEV.idle_w * a["device_powered_s"] + 1e-6
+    assert pack["idle_energy_j"] < spread["idle_energy_j"]
+
+
+# ---------------------------------------------------------------------------
+# spot revocation: evacuation, grace windows, forced kills, conservation
+# ---------------------------------------------------------------------------
+def _spot_pair_fleet():
+    """Device 0 is spot (with a resident), device 1 is fixed and empty."""
+    dev = DEV
+    return [DeviceSpec(device=dataclasses.replace(dev, spot=True),
+                       name="spot/0"),
+            DeviceSpec(device=dev, name="fixed/1")]
+
+
+def test_revocation_evacuates_with_exactly_one_migration():
+    fleet = _spot_pair_fleet()
+    trace = [_tenant(0, rate=80.0)]
+    pre = [Preemption(device=0, at_s=15.0, grace_s=5.0, restore_s=40.0)]
+    eng = ClusterEngine([], fleet, churn=trace,
+                        controller_factory=_static_factory(),
+                        anticipate=True, seed=0, preemptions=pre)
+    rep = eng.run(sim_time_limit=60.0)
+    _assert_conserved(rep)
+    a = rep["aggregate"]
+    assert a["preemptions"] == 1
+    assert a["preempt_evacuated"] == 1
+    assert a["preempt_killed"] == 0
+    j = rep["per_job"][0]
+    assert j["preempted"] == 0
+    assert j["device"].startswith("fixed")
+    # evacuation is ONE migration round, charged exactly once
+    evicts = [e for e in eng.churn_log if e[1] == "evict"]
+    assert len(evicts) == 1 and j["migrations"] == 1
+    assert evicts[0][0] == pytest.approx(15.0)
+
+
+def test_revocation_with_nowhere_to_go_kills_at_grace_deadline():
+    """The whole fleet is revoked: the resident serves through the grace
+    window on the doomed device, then its stranded backlog moves to
+    `rejected` — conservation survives the kill, and the kill never fires
+    before the deadline."""
+    fleet = [DeviceSpec(device=dataclasses.replace(DEV, spot=True),
+                        name="spot/0")]
+    trace = [_tenant(0, rate=400.0)]
+    pre = [Preemption(device=0, at_s=10.0, grace_s=4.0, restore_s=None)]
+    eng = ClusterEngine([], fleet, churn=trace,
+                        controller_factory=_static_factory(),
+                        anticipate=True, seed=0, preemptions=pre)
+    rep = eng.run(sim_time_limit=60.0)
+    _assert_conserved(rep)
+    j = rep["per_job"][0]
+    a = rep["aggregate"]
+    assert j["preempted"] == 1
+    assert a["preempt_killed"] == 1 and a["preempt_evacuated"] == 0
+    assert j["rejected"] > 0                  # the stranded backlog
+    assert j["backlog"] == 0 and not j["active"]
+    # grace honored: killed at (or just past) the deadline, never before
+    assert j["drained_at"] >= 10.0 + 4.0 - 1e-9
+    kills = [e for e in eng.churn_log if e[1] == "revoke-kill"]
+    assert len(kills) == 1
+
+
+def test_doomed_job_that_drains_early_is_not_killed():
+    """A doomed tenant whose backlog empties inside the grace window
+    drains normally: no forced kill, no preempted flag, no double-drain."""
+    fleet = [DeviceSpec(device=dataclasses.replace(DEV, spot=True),
+                        name="spot/0")]
+    trace = [_tenant(0, rate=1.0)]            # trivially drainable
+    pre = [Preemption(device=0, at_s=10.0, grace_s=8.0, restore_s=None)]
+    eng = ClusterEngine([], fleet, churn=trace,
+                        controller_factory=_static_factory(),
+                        anticipate=True, seed=0, preemptions=pre)
+    rep = eng.run(sim_time_limit=60.0)
+    _assert_conserved(rep)
+    j = rep["per_job"][0]
+    assert j["preempted"] == 0
+    assert rep["aggregate"]["preempt_killed"] == 0
+    assert j["drained_at"] is not None
+    # drains at the end of the step in flight when the backlog empties,
+    # so allow one step latency past the clipped departure
+    assert j["drained_at"] <= 18.0 + 0.5
+    assert sum(1 for e in eng.churn_log if e[1] == "drain") == 1
+    assert not any(e[1] == "revoke-kill" for e in eng.churn_log)
+
+
+def test_restore_returns_device_to_pool():
+    """After the restore edge, new admissions may land on the once-revoked
+    device again."""
+    fleet = _spot_pair_fleet()
+    trace = [_tenant(0, rate=50.0),
+             _tenant(1, admit=30.0, rate=50.0)]
+    pre = [Preemption(device=0, at_s=10.0, grace_s=2.0, restore_s=20.0)]
+    eng = ClusterEngine([], fleet, churn=trace,
+                        controller_factory=_static_factory(),
+                        anticipate=True, seed=0, preemptions=pre)
+    rep = eng.run(sim_time_limit=60.0)
+    _assert_conserved(rep)
+    assert any(e[1] == "restore" for e in eng.churn_log)
+    # the late tenant lands on the restored (now empty) spot device
+    assert rep["per_job"][1]["device"].startswith("spot")
+
+
+@pytest.mark.slow
+def test_spot_revocation_conservation_both_engines_bit_identical():
+    """The scenario trace under spot revocation: exact and vectorized
+    engines conserve requests and produce the SAME report bit for bit."""
+    reps = {}
+    for vec in (False, True):
+        reps[vec] = run_scenario_cluster(
+            "flash", spot=True, power_policy="spread",
+            seed=3, horizon_s=100.0, vectorized=vec)
+        _assert_conserved(reps[vec])
+    assert reps[False] == reps[True]
+    assert reps[False]["aggregate"]["preemptions"] >= 1
+
+
+def test_churn_entry_spot_equality_exact_vs_vector():
+    """Preemption conformance on the NON-partition churn path too."""
+    fleet = _spot_pair_fleet()
+    trace = [_tenant(0, rate=80.0), _tenant(1, rate=40.0)]
+    pre = [Preemption(device=0, at_s=12.0, grace_s=4.0, restore_s=35.0)]
+    reps = {}
+    for cls in (ClusterEngine, VectorClusterEngine):
+        eng = cls([], fleet, churn=list(trace),
+                  controller_factory=_static_factory(),
+                  anticipate=True, seed=0, preemptions=pre)
+        reps[cls.__name__] = eng.run(sim_time_limit=50.0)
+        _assert_conserved(reps[cls.__name__])
+    assert reps["ClusterEngine"] == reps["VectorClusterEngine"]
+
+
+def test_preemption_unknown_device_rejected():
+    with pytest.raises(ValueError):
+        ClusterEngine([], gpu_fleet(2), churn=[_tenant(0)],
+                      controller_factory=_static_factory(),
+                      preemptions=[Preemption(device=7, at_s=1.0)])
+
+
+def test_spot_fleet_and_revocation_trace():
+    fleet = spot_fleet(4, 2)
+    assert [s.device.spot for s in fleet] == [False, False, True, True]
+    # Device.share preserves the spot flag (dataclasses.replace path)
+    assert fleet[3].device.share(0.5).spot is True
+    pre = spot_revocation_trace(fleet, horizon_s=100.0, grace_s=7.0,
+                                seed=0)
+    assert [p.device for p in sorted(pre, key=lambda p: p.device)] == [2, 3]
+    for p in pre:
+        assert 20.0 <= p.at_s <= 80.0
+        assert p.grace_s == 7.0
+        assert p.restore_s is None or p.restore_s > p.at_s + p.grace_s
+    assert spot_revocation_trace(gpu_fleet(3), horizon_s=100.0) == []
+
+
+# ---------------------------------------------------------------------------
+# time-varying traffic specs
+# ---------------------------------------------------------------------------
+def test_make_rate_fn_steady_is_constant():
+    fn, piecewise, breaks = make_rate_fn(42.0, None)
+    assert piecewise is None and breaks is None
+    assert fn(0.0) == fn(17.3) == 42.0
+    fn2, _, _ = make_rate_fn(42.0, {"kind": "steady"})
+    assert fn2(5.0) == 42.0
+
+
+def test_make_rate_fn_diurnal_shape():
+    spec = {"kind": "diurnal", "period_s": 100.0, "peak_mult": 1.5,
+            "trough_mult": 0.5, "phase_s": 0.0}
+    fn, piecewise, breaks = make_rate_fn(10.0, spec)
+    assert breaks is None and piecewise == pytest.approx(100.0 / 16)
+    assert fn(0.0) == pytest.approx(5.0)       # trough at phase
+    assert fn(50.0) == pytest.approx(15.0)     # peak half a period later
+    assert fn(100.0) == pytest.approx(5.0)
+    # mean over one period is the midpoint of the swing
+    ts = np.linspace(0.0, 100.0, 10_001)
+    assert np.mean([fn(t) for t in ts]) == pytest.approx(10.0, rel=1e-3)
+
+
+def test_make_rate_fn_flash_step_and_breaks():
+    spec = {"kind": "flash", "at_s": 50.0, "duration_s": 10.0, "mult": 3.0}
+    fn, piecewise, breaks = make_rate_fn(10.0, spec)
+    assert fn(49.9) == 10.0 and fn(50.0) == 30.0
+    assert fn(59.9) == 30.0 and fn(60.0) == 10.0
+    assert list(breaks(0.0, 100.0)) == [50.0, 60.0]
+    assert list(breaks(52.0, 55.0)) == []
+    # the registered breaks make the queue's integral EXACT on windows
+    # straddling the spike edges
+    q = OpenLoopQueue(fn, max_queue=10, seed=0, step_breaks=breaks)
+    assert q.expected_arrivals(45.0, 65.0) \
+        == pytest.approx(5 * 10.0 + 10 * 30.0 + 5 * 10.0, abs=1e-9)
+
+
+def test_scenario_trace_traffic_wiring():
+    for traffic, kind in (("steady", None), ("diurnal", "diurnal"),
+                          ("flash", "flash")):
+        trace = scenario_trace(traffic, horizon_s=100.0, seed=3)
+        assert len(trace) == 6
+        kinds = {(e.traffic or {}).get("kind") for e in trace}
+        assert kinds == {kind}
+        assert sum(1 for e in trace if e.depart_s is not None) == 1
+        assert sum(1 for e in trace if e.admit_s > 0.0) == 1
+    with pytest.raises(ValueError):
+        scenario_trace("tsunami", horizon_s=100.0)
+    with pytest.raises(ValueError):
+        run_scenario_cluster("tsunami")
+
+
+# ---------------------------------------------------------------------------
+# record -> replay round trip for the scenario entry
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_scenario_record_then_replay_exact(tmp_path):
+    store = ProfileStore(str(tmp_path / "store"))
+    rep = run_scenario_cluster("flash", spot=True, power_policy="spread",
+                               seed=3, horizon_s=100.0,
+                               record="sc1", record_store=store)
+    recorded = json.loads(json.dumps(rp.load_trace(store, "sc1")))
+    meta = recorded["init"]["meta"]
+    assert meta["entry"] == "scenario" and meta["traffic"] == "flash"
+    assert meta["spot"] is True
+    # the churn serializer round-trips the traffic spec
+    assert all(e["traffic"]["kind"] == "flash"
+               for e in recorded["init"]["churn"])
+    assert rp.replay_run(recorded) == rep
+    assert rp.replay_run(recorded, vectorized=True) == rep
+    # counterfactual: fewer devices drops revocations of removed devices
+    fewer = rp.replay_run(recorded, policy="fewer-devices")
+    assert fewer["aggregate"]["devices"] == 3
+    assert fewer["aggregate"]["conserved"]
+
+
+def test_churn_serializer_round_trips_traffic_and_legacy_dicts():
+    e = ChurnJob(job=PAPER_JOBS[2], admit_s=1.0, depart_s=9.0,
+                 arrival_rate=25.0,
+                 traffic={"kind": "flash", "at_s": 5.0,
+                          "duration_s": 2.0, "mult": 3.0})
+    assert rp.deserialize_churn(
+        json.loads(json.dumps(rp.serialize_churn(e)))) == e
+    # a pre-scenario recorded dict (no "traffic" key) still deserializes
+    legacy = rp.serialize_churn(ChurnJob(job=PAPER_JOBS[2]))
+    legacy.pop("traffic")
+    assert rp.deserialize_churn(legacy).traffic is None

@@ -267,6 +267,30 @@ def test_expected_arrivals_burst_boundary_not_mispriced():
     assert abs(got - exact) < (burst - base) * (period / 8.0)
     assert abs(got - exact) < 0.2 * abs(burst * period - exact)
 
+    # a queue that REGISTERS the jump points gets the exact left-Riemann
+    # integral — no residual mispricing at all, on any window
+    def breaks(a, b):
+        out, t = [], np.floor(a / period) * period
+        while t <= b:
+            for x in (t, t + 0.3 * period):
+                if a < x < b:
+                    out.append(x)
+            t += period
+        return out
+
+    stepped = OpenLoopQueue(rate, max_queue=10, seed=0, step_breaks=breaks)
+    assert abs(stepped.expected_arrivals(0.0, period) - exact) <= 1e-9
+    # hand-integrated windows straddling jumps at odd offsets:
+    # [3, 47.5]: 6s@60 + 21s@20 + 9s@60 + 8.5s@20
+    assert abs(stepped.expected_arrivals(3.0, 47.5)
+               - (360.0 + 420.0 + 540.0 + 170.0)) <= 1e-9
+    # [8.9, 9.1] straddles the burst-off edge at 9.0
+    assert abs(stepped.expected_arrivals(8.9, 9.1)
+               - (0.1 * burst + 0.1 * base)) <= 1e-9
+    # constant sub-window: bit-identical to the single-point product
+    assert stepped.expected_arrivals(10.0, 20.0) \
+        == legacy.expected_arrivals(10.0, 20.0)
+
 
 def test_poisson_split_statistical_agreement():
     """Sampling arrivals in one window == splitting the window into
