@@ -97,12 +97,37 @@ class DNNScalerController:
         executor's analytic `price_surface` floor."""
         self._surface = None
         self._surface_margin = 1.0
+        model_start = None
         lib = self.surface_library
         if lib is not None:
             # a partitioned scaler seeds from the tensor slice at ITS rung
             share = getattr(self.scaler, "share", None)
             pred = (lib.predict(self.surface_key, share=share)
                     if share is not None else lib.predict(self.surface_key))
+            if pred is not None and getattr(lib, "last_tier",
+                                            "library") == "model":
+                # zero-probe cost-model prior: its support mask is
+                # all-False by construction, so it must NEVER pin the
+                # frontier or jump like probed history — it only nominates
+                # a START point for the climb, at a conservative 0.6*SLO
+                # target (prediction error budget on top of the library
+                # path's 0.75 mean-to-p95 slack).  Pins still come from
+                # the analytic price_surface floor below, exactly as if
+                # the library had refused outright.
+                from repro.serving.device_model import best_feasible_point
+                est = pred[0]
+                if est.ndim == 3:
+                    est = est[:, :, 0]       # largest rung (full share)
+                bs_vals = np.asarray(lib.bs_values)
+                mtl_vals = np.asarray(lib.mtl_values)
+                keep = bs_vals <= self.max_bs
+                mtl_keep = mtl_vals[mtl_vals <= self.max_mtl]
+                best = best_feasible_point(est[keep][:, :len(mtl_keep)],
+                                           bs_vals[keep], mtl_keep,
+                                           0.6 * self.slo)
+                if best is not None:
+                    model_start = (best[1], best[2])
+                pred = None
             if pred is not None:
                 est, support = pred
                 bs_vals = np.asarray(lib.bs_values)
@@ -149,6 +174,8 @@ class DNNScalerController:
             lat = executor.price_surface(bs_vals, mtl_vals)
             self._surface = (bs_vals, mtl_vals, lat)
             self.scaler.seed_surface(bs_vals, mtl_vals, lat)
+        if model_start is not None:
+            self.scaler.bs, self.scaler.mtl = model_start
 
     @property
     def approach(self) -> str:

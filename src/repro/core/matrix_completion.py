@@ -89,10 +89,28 @@ class SurfaceLibrary:
         self._version: dict = {}          # key -> bumped on every change
         self._pred_cache: dict = {}       # key -> (versions-fingerprint, est)
         self.observations = 0             # on-grid points recorded (total)
-        self.last_reject = None           # why the last predict() said None:
-        #                                   "points" | "base" | "rows" | "loo"
-        #                                   (drives load-time eviction in the
-        #                                   cross-run profile store)
+        self.last_reject = None           # why the library tier said None:
+        #                                   "points" | "base" | "rows" |
+        #                                   "loo" | "share" (drives load-time
+        #                                   eviction in the cross-run store)
+        self.last_tier = None             # which tier served the last
+        #                                   predict(): "library" | "model"
+        self._cost_model = None           # perf.cost_model.CostModel prior
+        self._features = {}               # key -> ModelFeatures (or None)
+
+    # -- zero-probe prior (perf/cost_model.py third tier) -------------------
+    def set_cost_model(self, model) -> None:
+        """Attach the learned HLO cost model; `predict` then falls back to
+        its zero-probe surface when similarity refuses."""
+        self._cost_model = model
+
+    def register_features(self, key, feat) -> None:
+        """Remember a tenancy's architecture features (None is remembered
+        too, so a featureless job is not re-derived every predict)."""
+        self._features[key] = feat
+
+    def has_features(self, key) -> bool:
+        return key in self._features
 
     @property
     def shape(self) -> tuple:
@@ -195,15 +213,52 @@ class SurfaceLibrary:
                 return s
         return None
 
-    def predict(self, key, share=None) -> Optional[tuple]:
-        """(completed mean-latency surface, support mask) for `key`, the
-        surface de-normalized by the job's own observed (1, 1) point.
+    def predict(self, key, share=None, allow_model=True) -> Optional[tuple]:
+        """(mean-latency surface, support mask) for `key`, served by the
+        first tier that can answer:
+
+          1. similarity fold-in (`_predict_library`) — completed from
+             architecturally similar probed history, support = dominance;
+          2. the learned HLO cost model (``set_cost_model``) — a
+             ZERO-PROBE prior priced from architecture features alone,
+             with an all-False support mask: downstream dominance pins,
+             surface jumps, and capacity promises all key on support, so
+             the prior can seed but never promise.  ``allow_model=False``
+             restricts to tier 1 (the profile store's load-time LOO
+             validation must judge the library, not the prior).
+
+        `last_tier` records which tier answered ("library" | "model");
+        `last_reject` always reports the LIBRARY tier's refusal reason.
+        """
+        result = self._predict_library(key)
+        if result is not None:
+            self.last_tier = "library"
+            return self._slice_result(result, share)
+        self.last_tier = None
+        if not allow_model or self._cost_model is None:
+            return None
+        feat = self._features.get(key)
+        if feat is None:
+            return None
+        est = np.asarray(self._cost_model.predict_surface(
+            feat, self.bs_values, self.mtl_values, self.share_values),
+            np.float64).reshape(self.shape)
+        if not np.isfinite(est).all() or (est <= 0).any():
+            return None
+        self.last_tier = "model"
+        return self._slice_result(
+            (est, np.zeros(self.shape, dtype=bool)), share)
+
+    def _predict_library(self, key) -> Optional[tuple]:
+        """The similarity tier: (completed mean-latency surface, support
+        mask) for `key`, the surface de-normalized by the job's own
+        observed (1, 1) point.
         None until the target has its (1, 1) normalizer plus `min_points`
         observations and the library holds `min_rows` similar tenancies
         (too little history would let one noisy row poison permanent
         dominance pins downstream).  With a multi-rung share grid the
-        completed object is the full (bs, mtl, share) tensor; pass
-        `share=` to get the 2-D (bs, mtl) slice at that rung.
+        completed object is the full (bs, mtl, share) tensor; the caller
+        (`predict`) slices 2-D (bs, mtl) views per share rung.
 
         The §3.3.2 premise is SIMILARITY, so the completion does not pool
         every tenancy: library rows are first ranked by agreement with the
@@ -256,7 +311,7 @@ class SurfaceLibrary:
         cached = self._pred_cache.get(key)
         if cached is not None and cached[0] == fingerprint:
             self.last_reject = cached[2] if len(cached) > 2 else None
-            return self._slice_result(cached[1], share)
+            return cached[1]
         # complete in LOG space: latency surfaces are near-multiplicative
         # families (host x batch x tenancy factors), so their logs are
         # genuinely low-rank — and the 3-orders-of-magnitude dynamic range
@@ -321,15 +376,20 @@ class SurfaceLibrary:
         result = (est, support)
         self.last_reject = None
         self._pred_cache[key] = (fingerprint, result, None)
-        return self._slice_result(result, share)
+        return result
 
     def _slice_result(self, result, share):
         """The (bs, mtl) view of a prediction at one share rung (the full
-        object — 2-D, or the whole tensor — when `share` is None)."""
+        object — 2-D, or the whole tensor — when `share` is None).  An
+        unknown/off-grid rung returns None with `last_reject = "share"` —
+        distinct from the no-history rejections, so callers can tell a
+        bad rung apart from a cold library."""
         if result is None or share is None or len(self.share_values) == 1:
             return result
         s = self.share_index(share)
         if s is None:
+            self.last_reject = "share"
+            self.last_tier = None
             return None
         est, support = result
         return est[:, :, s], support[:, :, s]

@@ -200,6 +200,21 @@ def profile_store_tables(store) -> str:
                 f"| {mk} | {len(samples)} | "
                 f"{float(np.quantile(samples, 0.5)) * 1e3:.1f}ms | "
                 f"{float(np.quantile(samples, 0.9)) * 1e3:.1f}ms |")
+    cost_models = store.section("cost_model")
+    if cost_models:
+        parts.append("\n| cost model | schema | trained rows | signatures | "
+                     "share rungs | autotune gen |")
+        parts.append("|---|---|---|---|---|---|")
+        for dc in sorted(cost_models):
+            r = cost_models[dc]
+            if not isinstance(r, dict):
+                continue
+            parts.append(
+                f"| {dc} | {r.get('schema', '?')} | "
+                f"{r.get('n_rows', '?')} | "
+                f"{len(r.get('train_signatures', []) or [])} | "
+                f"{len(r.get('rung_factors', {}) or {})} | "
+                f"{r.get('autotune_generation', '?')} |")
     interference = store.section("interference")
     if interference:
         parts.append("\n| partition interference | samples | "

@@ -167,6 +167,13 @@ def main() -> None:
                          "surface rows / migration calibrations before "
                          "serving and persist this run's probing "
                          "afterwards (warm start; see perf.profile_store)")
+    ap.add_argument("--train-cost-model", default=None, metavar="DEVCLASS",
+                    help="maintenance action: train the learned HLO cost "
+                         "model for DEVCLASS (e.g. tesla-p40) from the "
+                         "--profile-store's persisted surface rows, save "
+                         "it into the store's cost_model section, and "
+                         "exit.  The next cluster boot serves it as the "
+                         "zero-probe prediction tier (perf.cost_model)")
     ap.add_argument("--record", default=None, metavar="NAME",
                     help="record this cluster/churn/partition run's inputs "
                          "and event stream into the profile store under "
@@ -195,6 +202,30 @@ def main() -> None:
                             or args.scenarios):
         ap.error("--record applies to --cluster / --churn / --partition "
                  "/ --scenarios runs only")
+
+    if args.train_cost_model is not None:
+        if store is None:
+            ap.error("--train-cost-model requires --profile-store (the "
+                     "model is trained from its persisted surface rows)")
+        from repro.perf import cost_model as cm
+        dc = args.train_cost_model
+        model = cm.train_cost_model(store, dc,
+                                    autotune_generation=autotune.generation())
+        if model is None:
+            rows = sum(1 for r in store.section("surfaces").values()
+                       if isinstance(r, dict)
+                       and r.get("device_class") == dc)
+            print(f"cost model[{dc}]: NOT trained — {rows} surface rows "
+                  f"for this device class; need >= 4 with recognizable "
+                  f"signatures and a device model (tesla-p40 / tpu-v5e)")
+            return
+        cm.save_cost_model(store, model)
+        store.save()
+        print(f"cost model[{dc}]: trained on {model.n_rows} surface rows "
+              f"({len(model.train_signatures)} signatures), "
+              f"{len(model.rung_factors)} share-rung factors — saved to "
+              f"{store.path}")
+        return
 
     def warn_truncated(agg: dict) -> None:
         # satellite of the max_steps bugfix: a truncated run used to look

@@ -34,10 +34,44 @@ _DTYPE_BYTES = {
     "token": 0, "opaque": 0, "u1": 1, "s1": 1,
 }
 
-_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([\d,]*)\]")
+# dims may be dynamic in unoptimized/bounded-dynamic modules: "<=8" is a
+# bounded dynamic dim, "?" fully dynamic — both degrade conservatively in
+# `_dim_count` (bound / 1) with a warning instead of silently unmatching
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([\d,<=? ]*)\]")
 _HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n"\s*:\s*"(\d+)"')
+
+# parser-degradation notes for the current analyze_hlo() call (deduped);
+# the cost model reads these to know when byte counts are estimates
+_WARNINGS: set = set()
+
+
+def _warn(msg: str) -> None:
+    _WARNINGS.add(msg)
+
+
+def _dim_count(d: str) -> int:
+    """Element count of one dim literal, degrading conservatively:
+    '<=N' (bounded dynamic) counts the bound, '?' (unbounded dynamic)
+    counts 1, junk counts 1 — each with a warning."""
+    d = d.strip()
+    if not d:
+        return 1
+    if d.startswith("<="):
+        _warn(f"dynamic dim '{d}': counted at its bound")
+        d = d[2:].strip()
+    elif d == "?":
+        _warn("unbounded dynamic dim '?': counted as 1")
+        return 1
+    try:
+        n = int(d)
+    except ValueError:
+        _warn(f"unparseable dim {d!r}: counted as 1")
+        return 1
+    if n == 0:
+        _warn("degenerate 0-element shape")
+    return n
 
 
 def _split_result_opcode(rhs: str) -> tuple[str, str]:
@@ -76,24 +110,79 @@ _SKIP_BYTES_OPS = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# op-class buckets for the learned cost model's feature histogram
+# (perf/cost_model.py): architecture "fingerprints" that predict the
+# host-overhead / amortization calibration better than raw FLOP counts —
+# a cell-based NAS net is thousands of tiny reshuffle-heavy ops, an RNN
+# is a while loop, a transformer is dot-dominated
+OP_CLASSES = ("conv", "depthwise", "dense", "rnn", "elementwise",
+              "reshuffle")
+
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "logistic", "rsqrt", "sqrt", "negate",
+    "abs", "sign", "floor", "ceil", "compare", "select", "clamp", "convert",
+    "reduce", "reduce-window", "map", "exponential-minus-one", "and", "or",
+    "not", "xor",
+}
+_RESHUFFLE_OPS = {
+    "reshape", "transpose", "broadcast", "concatenate", "slice",
+    "dynamic-slice", "dynamic-update-slice", "pad", "gather", "scatter",
+    "copy", "reverse", "iota", "sort",
+}
+_UNCLASSED_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "get-dimension-size",
+    "custom-call", "fusion", "call", "conditional",
+}
+
+
+def _op_class(ins: "Instr"):
+    """OP_CLASSES bucket for one instruction, or None for structural ops."""
+    op = ins.opcode
+    if op == "convolution":
+        m = re.search(r"feature_group_count=(\d+)", ins.rhs)
+        return "depthwise" if m and int(m.group(1)) > 1 else "conv"
+    if op == "dot":
+        return "dense"
+    if op == "while":
+        return "rnn"
+    if op in _ELEMENTWISE_OPS:
+        return "elementwise"
+    if op in _RESHUFFLE_OPS:
+        return "reshuffle"
+    if not op or op in _UNCLASSED_OPS or op.endswith("-start") \
+            or op.endswith("-done") or any(op.startswith(c)
+                                           for c in _COLLECTIVES):
+        return None
+    return "elementwise"        # unrecognized compute op: least-wrong bucket
+
 
 _F32_AS_BF16 = False  # set by analyze_hlo; see its docstring
 
 
 def _shape_bytes_str(s: str) -> int:
-    """Sum bytes of every shape literal appearing in s."""
+    """Sum bytes of every shape literal appearing in s (tuple-shaped
+    results contribute every element shape).  Unknown dtypes are charged
+    conservatively at 4 bytes with a warning — silently skipping them
+    under-counted HBM traffic for any dtype outside `_DTYPE_BYTES`."""
     total = 0
+    matched = False
     for dtype, dims in _SHAPE_RE.findall(s):
+        matched = True
         b = _DTYPE_BYTES.get(dtype)
         if b is None:
-            continue
+            _warn(f"unknown dtype {dtype!r}: assumed 4 bytes")
+            b = 4
         if _F32_AS_BF16 and dtype == "f32":
             b = 2
         n = 1
         if dims:
             for d in dims.split(","):
-                n *= int(d)
+                n *= _dim_count(d)
         total += n * b
+    if not matched and "[" in s:
+        _warn(f"unparsed shape text {s.strip()[:40]!r}: counted as 0 bytes")
     return total
 
 
@@ -143,8 +232,8 @@ def parse_module(text: str) -> tuple[dict, Optional[str]]:
                 if m.group(1):
                     entry = cur.name
                 # header params: "name: f32[2,3]" pairs
-                for pm in re.finditer(r"([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\])",
-                                      line):
+                for pm in re.finditer(
+                        r"([\w.\-]+):\s*([a-z0-9]+\[[\d,<=? ]*\])", line):
                     cur.symtab[pm.group(1)] = pm.group(2)
             continue
         if line.strip() == "}":
@@ -171,7 +260,7 @@ def _dot_flops(ins: Instr, symtab: dict) -> float:
     out_elems = 1
     if m.group(2):
         for d in m.group(2).split(","):
-            out_elems *= int(d)
+            out_elems *= _dim_count(d)
     ops = re.findall(r"%([\w.\-]+)", _operand_region(ins.rhs))
     cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
     if not ops or not cd_m:
@@ -180,7 +269,8 @@ def _dot_flops(ins: Instr, symtab: dict) -> float:
     lm = _SHAPE_RE.search(lhs_shape)
     if not lm:
         return 0.0
-    lhs_dims = [int(x) for x in lm.group(2).split(",")] if lm.group(2) else []
+    lhs_dims = [_dim_count(x)
+                for x in lm.group(2).split(",")] if lm.group(2) else []
     contract = 1
     for idx in (cd_m.group(1).split(",") if cd_m.group(1) else []):
         i = int(idx)
@@ -313,6 +403,7 @@ def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
     """
     global _F32_AS_BF16
     _F32_AS_BF16 = f32_as_bf16
+    _WARNINGS.clear()
     comps, entry = parse_module(text)
 
     multipliers: dict[str, float] = defaultdict(float)
@@ -358,6 +449,7 @@ def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
     hbm = 0.0
     coll_bytes = {k: 0.0 for k in _COLLECTIVES}
     coll_count = {k: 0 for k in _COLLECTIVES}
+    op_counts = {k: 0.0 for k in OP_CLASSES}
 
     for name, comp in comps.items():
         mult = multipliers.get(name, 0.0)
@@ -366,6 +458,9 @@ def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
         in_fusion = name in fusion_callees
         for ins in comp.instrs:
             op = ins.opcode
+            cls = _op_class(ins)
+            if cls is not None:
+                op_counts[cls] += mult
             flops += mult * _dot_flops(ins, comp.symtab)
             if f32_as_bf16 and op == "convert":
                 continue
@@ -407,6 +502,7 @@ def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
                 coll_bytes[base] += mult * nb
                 coll_count[base] += int(mult)
 
+    n_ops = sum(op_counts.values())
     return {
         "flops": flops,
         "hbm_bytes": hbm,
@@ -414,6 +510,14 @@ def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
         "coll_count": coll_count,
         "total_coll_bytes": sum(coll_bytes.values()),
         "n_computations": len(comps),
+        # trip-count-weighted op-class mix (cost-model features)
+        "n_ops": n_ops,
+        "op_hist": {k: (v / n_ops if n_ops else 0.0)
+                    for k, v in op_counts.items()},
+        # parser degradations hit during this analysis (unknown dtypes,
+        # dynamic/degenerate dims, unparseable shapes) — byte counts are
+        # conservative ESTIMATES whenever this is non-empty
+        "warnings": sorted(_WARNINGS),
     }
 
 

@@ -326,7 +326,9 @@ class ProfileStore:
                 evicted.append(sk)
         if validate:
             for sk, key in list(loaded):
-                pred = lib.predict(key)
+                # library tier only: a cost-model prior answering here
+                # would mask the LOO verdict this eviction gate needs
+                pred = lib.predict(key, allow_model=False)
                 if pred is None and lib.last_reject == "loo":
                     lib.reset_row(key)
                     self.delete("surfaces", sk)

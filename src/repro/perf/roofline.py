@@ -84,6 +84,29 @@ class Roofline:
         }
 
 
+def bound_time_features(flops: float, hbm_bytes: float,
+                        coll_bytes: float = 0.0, *,
+                        peak_flops: float = PEAK_FLOPS,
+                        hbm_bw: float = HBM_BW,
+                        ici_bw: float = ICI_BW) -> dict:
+    """Roofline-derived scalars for the learned cost model
+    (``perf/cost_model.py``): the three bound times on the given device,
+    which of them binds, and the arithmetic intensity.  Accepts explicit
+    device rates so the same op counts can be priced per device class."""
+    t_comp = flops / peak_flops
+    t_mem = hbm_bytes / hbm_bw
+    t_coll = coll_bytes / ici_bw
+    return {
+        "t_compute": t_comp,
+        "t_memory": t_mem,
+        "t_collective": t_coll,
+        "bound_time": max(t_comp, t_mem, t_coll),
+        # FLOP/byte; degenerate inputs fall back to balanced intensity
+        "intensity": (flops / hbm_bytes) if hbm_bytes > 0
+        else (peak_flops / hbm_bw),
+    }
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic 'useful' FLOPs per step: 6*N*D train, 2*N*D inference
     (N = active params, D = tokens processed)."""

@@ -78,6 +78,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from repro.perf import autotune
+from repro.perf import cost_model as cost_model_mod
 from repro.serving import device_model as dm
 from repro.serving import partition as pt
 from repro.serving import tenancy
@@ -335,6 +336,8 @@ class ClusterEngine:
         self.profile_store = profile_store
         self.store_report: Optional[dict] = None
         self._arrival_rates = arrival_rates or {}
+        self.cost_models: dict = {}       # device class -> fitted CostModel
+        self._job_feats: dict = {}        # job_id -> ModelFeatures | None
         if profile_store is not None and surface_library is not None:
             # seed the shared surface from prior runs' persisted rows so a
             # recurring architecture in a FRESH process hits the
@@ -347,6 +350,31 @@ class ClusterEngine:
                     autotune_generation=gen)
                 self.store_report["loaded"] += res["loaded"]
                 self.store_report["evicted"] += res["evicted"]
+        if profile_store is not None:
+            # learned HLO cost models (perf/cost_model.py): the zero-probe
+            # THIRD prediction tier.  Per device class, staleness-evicted
+            # at load like surface rows; with an empty cost_model section
+            # every prediction path below is byte-identical to before.
+            gen = autotune.generation()
+            for dc in sorted({spec.device.name for spec in fleet}):
+                model = cost_model_mod.load_cost_model(
+                    profile_store, dc, autotune_generation=gen)
+                if model is not None:
+                    self.cost_models[dc] = model
+            if self.cost_models:
+                if surface_library is not None:
+                    # the shared library serves ONE prior: the model of
+                    # the fleet's most common device class that has one
+                    counts: dict = {}
+                    for spec in fleet:
+                        counts[spec.device.name] = \
+                            counts.get(spec.device.name, 0) + 1
+                    primary = max(self.cost_models,
+                                  key=lambda dc: counts.get(dc, 0))
+                    surface_library.set_cost_model(self.cost_models[primary])
+                if self.store_report is not None:
+                    self.store_report["cost_model"] = \
+                        sorted(self.cost_models)
 
         self.stall_time = 0.0
         self.compile_stall_s = 0.0
@@ -559,6 +587,12 @@ class ClusterEngine:
                                          part_share=share)
         profiling_ex = self._make_executor(job, d, k, self.seed + 1000 + i,
                                            part_share=share)
+        if self.cost_models and self.surface_library is not None:
+            # the controller's surface seeding keys the library by job_id;
+            # features must be registered BEFORE the factory runs so the
+            # zero-probe tier can answer its very first predict()
+            self.surface_library.register_features(job.job_id,
+                                                   self._job_features(job))
         controller = self.controller_factory(job, profiling_ex)
         if share is not None and hasattr(controller, "note_share_grant"):
             controller.note_share_grant(share)
@@ -602,7 +636,10 @@ class ClusterEngine:
             n_mtl = len(mtl_vals)
         surface = None
         if lib is not None:
-            pred = lib.predict(job.job_id)
+            # library tier only: the model tier's surface is absolute (not
+            # a normalized shape) and carries no support, so it must not
+            # ride the re-anchoring below — it gets its own branch
+            pred = lib.predict(job.job_id, allow_model=False)
             if pred is not None:
                 est, support = pred
                 est, support = est[:, :n_mtl], support[:, :n_mtl]
@@ -613,6 +650,27 @@ class ClusterEngine:
                 base = _base_latency(spec, prof, k)
                 surface = np.where(support, est / est[0, 0] * base,
                                    np.inf)
+        if surface is None and self.cost_models:
+            # zero-probe tier: a never-before-seen job (no similar probed
+            # history) is priced from its MODEL-PREDICTED profile through
+            # the same mesh/share-aware laws, instead of the generic
+            # profile fallback — placement SCORES only; the scaler's pins
+            # and capacity promises still come from probed support
+            model = self.cost_models.get(spec.device.name)
+            feat = self._job_features(job) if model is not None else None
+            if feat is not None:
+                ck = ("cm", job.job_id, d, k)
+                surface = self._steady_cache.get(ck)
+                if surface is None:
+                    pprof = model.predict_profile(
+                        feat, name=f"{job.dnn}/{job.dataset}")
+                    if mesh is not None:
+                        ex = SimExecutor(pprof, device=dev, mesh_shape=mesh)
+                        surface = ex.price_surface(bs_vals, mtl_vals)
+                    else:
+                        surface = dm.mt_latency_grid(dev, pprof, bs_vals,
+                                                     mtl_vals)
+                    self._steady_cache[ck] = surface
         if surface is None:
             # the analytic grid depends only on (job, device, k): memoize —
             # the relocation/rebalance scans re-price the same triple many
@@ -644,6 +702,14 @@ class ClusterEngine:
         if spec.mesh_shape is not None:
             cost += st.job.profile().param_bytes * mtl / self.ckpt_bps
         return cost
+
+    def _job_features(self, job):
+        """Memoized cost-model features for one job (None is memoized too:
+        a featureless architecture is asked exactly once)."""
+        jid = job.job_id
+        if jid not in self._job_feats:
+            self._job_feats[jid] = cost_model_mod.features_for_job(job)
+        return self._job_feats[jid]
 
     def _calibration_key(self, st: _JobState, spec: DeviceSpec) -> str:
         return f"{st.job.dnn}/{st.job.dataset}|{spec.device.name}"

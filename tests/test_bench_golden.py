@@ -94,6 +94,23 @@ def test_scenarios_bench_matches_committed_baseline():
 
 
 @pytest.mark.slow
+def test_costmodel_bench_matches_committed_baseline():
+    """The cost-model suite is pinned like kernels: its deterministic
+    leave-one-job-out `medrelerr=` row is compared under the
+    lower-is-better envelope, the committed baseline itself must meet the
+    <=0.30 held-out accuracy contract, and re-running exercises the
+    warm-start scenario's in-process asserts (strict probe reduction,
+    all-False support, no pinned frontier)."""
+    committed = _committed("costmodel")
+    rows = {r["name"]: _parse_metrics(r["derived"])
+            for r in committed["rows"]}
+    assert rows["costmodel/loo"]["medrelerr"] <= 0.30
+    warm = next(m for n, m in rows.items() if "/warmstart/" in n)
+    assert warm["probes_model"] < warm["probes_refusal"]
+    assert check_against(REPO, tol=0.10, only={"costmodel"}) == 0
+
+
+@pytest.mark.slow
 def test_kernels_bench_matches_committed_baseline(tmp_path):
     """The kernels suite is gated too (closing the 'only cluster/churn
     are pinned' gap): its deterministic pallas-vs-reference `maxerr=`

@@ -1,0 +1,181 @@
+"""Learned HLO cost model (perf.cost_model): training, persistence with
+staleness eviction, the zero-probe prediction tier's no-promises contract,
+and the warm-start acceptance scenario."""
+
+import numpy as np
+import pytest
+
+from benchmarks.costmodel_benches import (BS_GRID, DEVICE_CLASS, MAX_MTL,
+                                          _dense_records, _paper_pairs,
+                                          _store_excluding, _truth_grid,
+                                          warmstart_scenario)
+from repro.core.matrix_completion import SurfaceLibrary
+from repro.perf import cost_model as cm
+from repro.perf.profile_store import ProfileStore
+from repro.serving import device_model as dm
+
+MTLS = tuple(range(1, MAX_MTL + 1))
+
+
+@pytest.fixture(scope="module")
+def records():
+    return _dense_records(_paper_pairs())
+
+
+@pytest.fixture(scope="module")
+def model(records):
+    m = cm.train_cost_model(_store_excluding(records, ""), DEVICE_CLASS)
+    assert m is not None
+    return m
+
+
+# -- training + prediction ---------------------------------------------------
+def test_train_refuses_below_min_rows(tmp_path, records):
+    st = ProfileStore(str(tmp_path))
+    for sk, rec in list(records.items())[:3]:
+        st.put("surfaces", sk, rec)
+    assert cm.train_cost_model(st, DEVICE_CLASS) is None
+    assert cm.train_cost_model(st, "unknown-device-class") is None
+
+
+def test_heldout_prediction_within_paper_contract(records):
+    """Spot-check three architecture-family folds of the full LOO the
+    costmodel bench pins: the held-out surface must be finite, positive,
+    and within the <= 0.30 median relative error contract."""
+    for dnn, ds in (("mobilenet_v1_05", "imagenet"),
+                    ("resnet_v2_101", "caltech"),
+                    ("inception_v2", "imagenet")):
+        sig = f"{dnn}/{ds}"
+        fold = cm.train_cost_model(_store_excluding(records, sig),
+                                   DEVICE_CLASS)
+        assert sig not in fold.train_signatures
+        est = np.asarray(fold.predict_surface(
+            cm.features_for_signature(sig), BS_GRID, MTLS))
+        assert np.isfinite(est).all() and (est > 0).all()
+        truth = _truth_grid(dnn, ds)
+        assert np.median(np.abs(est - truth) / truth) <= 0.30, sig
+
+
+def test_features_for_signature_covers_paper_table():
+    for dnn, ds in _paper_pairs():
+        feat = cm.features_for_signature(f"{dnn}/{ds}")
+        assert feat is not None
+        vec = feat.vector(dm.TESLA_P40.peak_flops, dm.TESLA_P40.hbm_bw)
+        assert vec.shape == (cm.FEATURE_DIM,) and np.isfinite(vec).all()
+    assert cm.features_for_signature("no-such-arch/imagenet") is None
+
+
+# -- persistence + staleness eviction (satellite: stale model bugfix) --------
+def test_record_round_trip(model):
+    clone = cm.CostModel.from_record(model.to_record())
+    feat = cm.features_for_signature("resnet_v2_50/imagenet")
+    np.testing.assert_allclose(
+        np.asarray(clone.predict_surface(feat, BS_GRID, MTLS)),
+        np.asarray(model.predict_surface(feat, BS_GRID, MTLS)))
+
+
+def test_load_absent_record_is_a_noop(tmp_path):
+    st = ProfileStore(str(tmp_path))
+    assert cm.load_cost_model(st, DEVICE_CLASS) is None
+    assert st.evictions == 0
+    assert not (tmp_path / "profile_store.json").exists()
+
+
+def test_malformed_record_evicted_at_load(tmp_path, model):
+    st = ProfileStore(str(tmp_path))
+    for wreck in (
+        {"schema": cm.COST_MODEL_SCHEMA + 1},            # future schema
+        dict(model.to_record(), W=[[0.0] * 3] * 2),      # wrong shape
+        dict(model.to_record(), mu=[float("nan")] * cm.FEATURE_DIM),
+        "not-a-dict",
+    ):
+        before = st.evictions
+        cm.save_cost_model(st, model)
+        st.put(cm.COST_MODEL_SECTION, DEVICE_CLASS, wreck)
+        assert cm.load_cost_model(st, DEVICE_CLASS) is None
+        # evicted, not just skipped: the poisoned record must never be
+        # served again (nor re-judged on every boot)
+        assert st.evictions == before + 1
+        assert st.get(cm.COST_MODEL_SECTION, DEVICE_CLASS) is None
+
+
+def test_stale_generation_evicted_only_when_tile_dependent(tmp_path,
+                                                           records):
+    st = ProfileStore(str(tmp_path))
+    tuned = cm.train_cost_model(_store_excluding(records, ""), DEVICE_CLASS,
+                                autotune_generation=1, tile_dependent=True)
+    cm.save_cost_model(st, tuned)
+    assert cm.load_cost_model(st, DEVICE_CLASS,
+                              autotune_generation=1) is not None
+    assert cm.load_cost_model(st, DEVICE_CLASS,
+                              autotune_generation=2) is None
+    assert st.evictions == 1
+    # simulated-latency models (tile_dependent=False) survive re-tunes
+    sim = cm.train_cost_model(_store_excluding(records, ""), DEVICE_CLASS)
+    cm.save_cost_model(st, sim)
+    assert cm.load_cost_model(st, DEVICE_CLASS,
+                              autotune_generation=7) is not None
+
+
+# -- the prediction tier: seed, never promise --------------------------------
+def _library_with_model(model, key="job"):
+    lib = SurfaceLibrary(bs_values=BS_GRID, max_mtl=MAX_MTL)
+    lib.set_cost_model(model)
+    lib.register_features(
+        key, cm.features_for_signature("mobilenet_v2_1/imagenet"))
+    return lib
+
+
+def test_model_tier_serves_cold_library_with_no_support(model):
+    lib = _library_with_model(model)
+    pred = lib.predict("job")
+    assert pred is not None and lib.last_tier == "model"
+    est, support = pred
+    assert est.shape == (len(BS_GRID), MAX_MTL)
+    assert np.isfinite(est).all() and (est > 0).all()
+    assert not support.any()         # a prior is never probed history
+
+
+def test_allow_model_false_restricts_to_library_tier(model):
+    lib = _library_with_model(model)
+    assert lib.predict("job", allow_model=False) is None
+    assert lib.last_tier is None
+
+
+def test_model_tier_needs_registered_features(model):
+    lib = SurfaceLibrary(bs_values=BS_GRID, max_mtl=MAX_MTL)
+    lib.set_cost_model(model)
+    assert lib.predict("never-registered") is None
+    assert lib.last_tier is None
+
+
+def test_cold_library_without_model_still_refuses(model):
+    lib = SurfaceLibrary(bs_values=BS_GRID, max_mtl=MAX_MTL)
+    assert lib.predict("job") is None and lib.last_tier is None
+
+
+def test_model_tier_respects_share_slicing(model):
+    lib = SurfaceLibrary(bs_values=BS_GRID, max_mtl=MAX_MTL,
+                         share_values=(0.5, 1.0))
+    lib.set_cost_model(model)
+    lib.register_features(
+        "job", cm.features_for_signature("mobilenet_v2_1/imagenet"))
+    est, support = lib.predict("job", share=0.5)
+    assert est.shape == (len(BS_GRID), MAX_MTL) and not support.any()
+    # satellite bugfix: an off-grid rung is a DISTINCT rejection, even
+    # when the model tier answered at the tensor level
+    assert lib.predict("job", share=0.33) is None
+    assert lib.last_reject == "share" and lib.last_tier is None
+
+
+# -- acceptance: cold process reaches steady state in fewer probes -----------
+@pytest.mark.slow
+def test_warm_start_beats_refusal_path_in_probes(records):
+    """A cold process with a trained model must reach the HybridScaler
+    steady point for a held-out Table-4 architecture in strictly fewer
+    probes than the similarity-only (library-refusal) path — with the
+    no-promises invariants asserted inside the scenario (all-False
+    support, no pinned frontier, same steady regime)."""
+    probes_model, probes_refusal, steady, _ = warmstart_scenario(records)
+    assert probes_model < probes_refusal
+    assert steady[1] >= 2            # a real MT climb, not a trivial point

@@ -120,3 +120,88 @@ ENTRY %main (p: f32[2]) -> f32[2] {
     comps, entry = parse_module(text)
     assert entry == "main"
     assert set(comps) == {"helper", "main"}
+
+
+def test_hardened_parser_warns_on_odd_shapes_and_stays_finite():
+    """Regression for the parser-hardening sweep: unknown dtypes, bounded
+    and unbounded dynamic dims, and degenerate 0-element shapes must each
+    produce a conservative estimate plus a `warnings` entry — never a
+    crash, a negative count, or a silent garbage number."""
+    text = """
+HloModule m
+
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %a = myquant4[8,128]{1,0} add(%p0, %p0)
+  %b = f32[<=16,128]{1,0} abs(%a)
+  %c = f32[?,128]{1,0} negate(%b)
+  %d = f32[8,0]{1,0} exponential(%c)
+  ROOT %e = f32[8,128]{1,0} tanh(%d)
+}
+"""
+    r = analyze_hlo(text, f32_as_bf16=False)
+    warns = "\n".join(r["warnings"])
+    assert "unknown dtype 'myquant4'" in warns        # -> 4-byte fallback
+    assert "dynamic dim '<=16'" in warns              # -> counted at bound
+    assert "unbounded dynamic dim '?'" in warns       # -> counted as 1
+    assert "degenerate 0-element shape" in warns
+    assert np.isfinite(r["flops"]) and r["flops"] >= 0
+    assert np.isfinite(r["hbm_bytes"]) and r["hbm_bytes"] > 0
+    # the unknown-dtype add is byte-counted at the 4-byte fallback:
+    # 2 reads + 1 write of 8x128
+    assert r["hbm_bytes"] >= 3 * 8 * 128 * 4
+
+
+def test_clean_module_reports_no_warnings():
+    def f(a, b):
+        return jnp.tanh(a @ b)
+
+    text = _compile_text(f, jax.ShapeDtypeStruct((16, 32), jnp.float32),
+                         jax.ShapeDtypeStruct((32, 8), jnp.float32))
+    r = analyze_hlo(text)
+    assert r["warnings"] == []
+    assert r["n_ops"] > 0
+    assert abs(sum(r["op_hist"].values()) - 1.0) < 1e-9
+    assert r["op_hist"]["dense"] > 0
+
+
+def test_warnings_reset_between_analyses():
+    bad = """
+HloModule m
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0)
+  ROOT %a = qq8[4]{0} add(%p0, %p0)
+}
+"""
+    assert analyze_hlo(bad, f32_as_bf16=False)["warnings"] != []
+    clean = """
+HloModule m
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0)
+  ROOT %a = f32[4]{0} add(%p0, %p0)
+}
+"""
+    assert analyze_hlo(clean, f32_as_bf16=False)["warnings"] == []
+
+
+def test_op_class_histogram_buckets():
+    text = """
+HloModule m
+
+ENTRY %main (p0: f32[4,8]) -> f32[4,8] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %w = f32[8,8]{1,0} parameter(1)
+  %d = f32[4,8]{1,0} dot(%p0, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %t = f32[8,4]{1,0} transpose(%d), dimensions={1,0}
+  %t2 = f32[4,8]{1,0} transpose(%t), dimensions={1,0}
+  ROOT %a = f32[4,8]{1,0} add(%t2, %d)
+}
+"""
+    r = analyze_hlo(text, f32_as_bf16=False)
+    assert r["n_ops"] == 4
+    assert r["op_hist"]["dense"] == pytest.approx(0.25)
+    assert r["op_hist"]["reshuffle"] == pytest.approx(0.5)
+    assert r["op_hist"]["elementwise"] == pytest.approx(0.25)
+    assert r["op_hist"]["conv"] == 0.0

@@ -159,3 +159,33 @@ def test_seeded_scaler_converges_same_point_in_fewer_probes():
     probes_seed = len(set(v_seed))
     probes_full = len(set(v_full))
     assert probes_seed < probes_full
+
+
+def test_unknown_share_rung_rejects_with_distinct_reason():
+    """Satellite bugfix: an off-grid share rung used to return None with
+    a STALE `last_reject` left over from some earlier refusal — callers
+    could not tell a bad rung from a cold library.  Now it reports the
+    distinct "share" reason, and a valid rung still slices."""
+    lib = SurfaceLibrary(bs_values=BS_GRID, max_mtl=MAX_MTL,
+                         share_values=(0.5, 1.0))
+    for share in (0.5, 1.0):
+        for b in BS_GRID:
+            for m in range(1, MAX_MTL + 1):
+                lib.observe("historic", b, m,
+                            _lat_s(b, m, base_ms=7.0) / share, share=share)
+    for b, m in ((1, 1), (32, 1), (1, 8)):
+        lib.observe("new", b, m, _lat_s(b, m), share=1.0)
+
+    # valid rung: the library answers with the (bs, mtl) slice
+    pred = lib.predict("new", share=1.0)
+    assert pred is not None and lib.last_tier == "library"
+    est, support = pred
+    assert est.shape == (len(BS_GRID), MAX_MTL)
+
+    # off-grid rung: refused with the DISTINCT reason, not a stale one
+    assert lib.predict("new", share=0.33) is None
+    assert lib.last_reject == "share"
+    assert lib.last_tier is None
+
+    # and a later full-tensor predict is unaffected by the rejection
+    assert lib.predict("new") is not None
