@@ -41,6 +41,11 @@ Suites (one per paper table/figure — DESIGN.md §8):
                 bucketed baseline on one ragged decode trace (gated on
                 goodput and the capped continuous/static ratio), plus the
                 paged-KV kernel vs the ragged oracle (maxerr)
+  disagg        disaggregated prefill/decode: prefill pool + KV-transfer
+                fabric vs the best single-device mode on a long-prefill
+                trace (gated on goodput and the fleet/single ratio),
+                chunked vs co-tenant prefill TTFT attainment, and the
+                fabric's transfer accounting vs the analytic model (maxerr)
   alpha         ablation: hysteresis coefficient alpha (paper: 0.85 empirical)
   matcomp       ablation: matrix completion vs naive interpolation
   kernels       Pallas kernel micro-benches (interpret mode)
@@ -60,9 +65,9 @@ import time
 
 
 def suites():
-    from benchmarks import (costmodel_benches, kernel_benches, paper_benches,
-                            roofline_bench, scenario_benches, sim_benches,
-                            token_benches)
+    from benchmarks import (costmodel_benches, disagg_benches, kernel_benches,
+                            paper_benches, roofline_bench, scenario_benches,
+                            sim_benches, token_benches)
     return {
         "fig1": paper_benches.bench_fig1_sweeps,
         "table5": paper_benches.bench_table5_profiler,
@@ -83,6 +88,7 @@ def suites():
         "sim": sim_benches.bench_sim,
         "scenarios": scenario_benches.bench_scenarios,
         "tokens": token_benches.bench_tokens,
+        "disagg": disagg_benches.bench_disagg,
         "kernels": kernel_benches.bench_kernels,
         "real_decode": kernel_benches.bench_real_decode,
         "roofline": roofline_bench.bench_roofline,

@@ -237,7 +237,7 @@ class HybridScaler:
                  amnesty: int = 20, revert_tol: float = 0.05,
                  spike_guard: float = 1.5, persist_pins: int = 2,
                  mtl_move_cost_s: float = 2.0, min_eval_samples: int = 60,
-                 safety: float = 0.0, share_ladder=None):
+                 safety: float = 0.0, share_ladder=None, pool_ladder=None):
         self.slo = slo_s
         self.alpha = alpha
         self.primary = primary
@@ -269,6 +269,17 @@ class HybridScaler:
                            if self.share_ladder else 0)
         self._share_value = None       # off-ladder grant currently held
         self._share_cap_idx = self._share_idx
+        # fourth axis (disaggregated serving): a ladder of prefill-pool
+        # ratios — prefill devices per decode device.  Demand-capped like
+        # the share axis: `note_pool_demand` bounds requests by the
+        # measured prefill load, `observe_pool` grows under queue pressure
+        # and releases rungs the demand no longer covers.  None keeps the
+        # scaler exactly as before (no pool state is ever consulted).
+        self.pool_ladder = (tuple(sorted(float(r) for r in pool_ladder))
+                            if pool_ladder else None)
+        self._pool_idx = (len(self.pool_ladder) - 1
+                          if self.pool_ladder else 0)
+        self._pool_cap_idx = self._pool_idx
         self.bs = 1
         self.estimate = None
         if primary == "MT" and estimator is not None and observed:
@@ -349,6 +360,46 @@ class HybridScaler:
         if self.share_ladder is None:
             return
         self._share_cap_idx = self._rung_at_most(share)
+
+    # -- fourth axis: prefill-pool ratio ------------------------------------
+    @property
+    def pool_ratio(self):
+        if self.pool_ladder is None:
+            return None
+        return self.pool_ladder[self._pool_idx]
+
+    def note_pool_demand(self, demand_ratio: float) -> None:
+        """Demand-cap the pool axis: `demand_ratio` is the measured
+        prefill load in device-seconds per second per decode device, so
+        the smallest rung COVERING it is the largest pool worth holding —
+        rungs above it would only idle prefill silicon.  Mirrors
+        `set_share_cap` on the share axis."""
+        if self.pool_ladder is None:
+            return
+        cap = len(self.pool_ladder) - 1
+        for i, r in enumerate(self.pool_ladder):
+            if r >= demand_ratio - 1e-9:   # first rung that covers demand
+                cap = i
+                break
+        self._pool_cap_idx = cap
+
+    def observe_pool(self, prefill_wait_s: float, ttft_slo_s: float) -> bool:
+        """One pool-axis decision.  Releases a rung when the ratio sits
+        above the demand cap (prefill silicon the load cannot keep busy),
+        grows one when p95 prefill+transfer wait eats more than half the
+        TTFT budget and the cap allows it.  Returns True when the ratio
+        changed (the engine then resizes the pool's active membership)."""
+        if self.pool_ladder is None:
+            return False
+        if self._pool_idx > self._pool_cap_idx:
+            self._pool_idx -= 1
+            return True
+        if (prefill_wait_s > 0.5 * ttft_slo_s
+                and self._pool_idx < min(self._pool_cap_idx,
+                                         len(self.pool_ladder) - 1)):
+            self._pool_idx += 1
+            return True
+        return False
 
     # -- surface seeding ----------------------------------------------------
     def seed_surface(self, bs_values, mtl_values, latency_s,

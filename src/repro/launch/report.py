@@ -152,19 +152,43 @@ def scenario_tables(reports: dict) -> str:
     the structure examples/scenario_matrix.py dumps): goodput, minimum
     per-job SLO attainment, and the energy column the power-packing
     objective moves (joules per good request)."""
-    parts = ["| cell | goodput | min attain | J/good req | energy | "
-             "devices powered | evacuated | killed | conserved |",
-             "|---|---|---|---|---|---|---|---|---|"]
+    parts = ["| cell | goodput | min attain | J/good req | $/good req | "
+             "energy | devices powered | evacuated | killed | conserved |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
     for cell, rep in reports.items():
         a = rep["aggregate"]
         jpg = a.get("joules_per_good_request")
+        cpg = a.get("cost_per_good_request")
         parts.append(
             f"| {cell} | {a['goodput']:.1f}/s | "
             f"{a['min_attainment']:.3f} | "
             f"{f'{jpg:.4f}J' if jpg is not None else '—'} | "
+            f"{f'${cpg:.3g}' if cpg is not None else '—'} | "
             f"{a['energy_j']:.0f}J | {a['devices_powered']} | "
             f"{a['preempt_evacuated']} | {a['preempt_killed']} | "
             f"{'yes' if a['conserved'] else 'NO'} |")
+    return "\n".join(parts)
+
+
+def disagg_tables(reports: dict) -> str:
+    """Markdown for a disaggregated-serving comparison ({mode: token
+    report}, the structure examples/disagg_serve.py dumps): goodput, the
+    two per-token SLO attainments, and — for the disagg row — the
+    KV-transfer fabric's accounting."""
+    parts = ["| mode | goodput | TTFT p95 | TTFT attain | TPOT p95 | "
+             "TPOT attain | KV moved | wire time | conserved |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for mode, rep in reports.items():
+        fab = rep.get("fabric")
+        kv = f"{fab['bytes_moved'] / 1e9:.1f}GB" if fab else "—"
+        wire = f"{fab['busy_s'] * 1e3:.0f}ms" if fab else "—"
+        parts.append(
+            f"| {mode} | {rep['goodput_tokens_s']:.0f} tok/s | "
+            f"{rep['ttft_p95_s'] * 1e3:.0f}ms | "
+            f"{rep['ttft_attainment']:.3f} | "
+            f"{rep['tpot_p95_s'] * 1e3:.2f}ms | "
+            f"{rep['tpot_attainment']:.3f} | {kv} | {wire} | "
+            f"{'yes' if rep['conserved'] else 'NO'} |")
     return "\n".join(parts)
 
 
@@ -253,6 +277,9 @@ def main() -> None:
                     help="partition_serve.py --json output to tabulate")
     ap.add_argument("--scenarios", default=None,
                     help="scenario_matrix.py --json output to tabulate")
+    ap.add_argument("--disagg", default=None,
+                    help="examples/disagg_serve.py --json output to "
+                         "tabulate (disagg vs co-tenant vs chunked)")
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="cross-run profile store dir to summarize "
                          "(perf.profile_store)")
@@ -308,6 +335,10 @@ def main() -> None:
         parts.append("\n### Scenario matrix — traffic shape x spot "
                      "capacity x power packing\n")
         parts.append(scenario_tables(json.load(open(args.scenarios))))
+    if args.disagg and os.path.exists(args.disagg):
+        parts.append("\n### Disaggregated prefill/decode — pool + "
+                     "KV-transfer fabric vs single-device modes\n")
+        parts.append(disagg_tables(json.load(open(args.disagg))))
     if args.store:
         from repro.perf.profile_store import ProfileStore
         parts.append("\n### Cross-run profile store\n")

@@ -115,9 +115,19 @@ def main() -> None:
     ap.add_argument("--ttft-slo-ms", type=float, default=1000.0)
     ap.add_argument("--tpot-slo-ms", type=float, default=50.0)
     ap.add_argument("--prefill-mode", default="cotenant",
-                    choices=["cotenant", "timeslice"],
-                    help="prefill priced as a co-resident tenant vs "
-                         "time-sliced on the decode tenant")
+                    choices=["cotenant", "timeslice", "chunked", "disagg"],
+                    help="prefill priced as a co-resident tenant, "
+                         "time-sliced on the decode tenant, split into "
+                         "fixed token-budget chunks piggybacked on decode "
+                         "steps, or DISAGGREGATED onto a dedicated "
+                         "prefill pool with KV streamed over the "
+                         "interconnect fabric (serving.disagg)")
+    ap.add_argument("--prefill-pool", type=int, default=2,
+                    help="--prefill-mode disagg: prefill-pool members "
+                         "(dedicated devices)")
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="--prefill-mode chunked: prefill tokens "
+                         "piggybacked per decode step")
     ap.add_argument("--scenarios", action="store_true",
                     help="one scenario-matrix cell: time-varying traffic "
                          "x spot capacity x power packing on the MPS "
@@ -242,6 +252,31 @@ def main() -> None:
         prof = dm.llm_profile(cfg, mode="decode", kv_seq_budget=1024)
         trace = ragged_decode_trace(args.requests, args.seed,
                                     rate_rps=args.rate_rps)
+        if args.prefill_mode == "disagg":
+            from repro.serving.disagg import run_disagg_serving
+            rep = run_disagg_serving(
+                prof, seed=args.seed, trace=trace,
+                n_prefill=args.prefill_pool, kv_seq_budget=1024,
+                max_slots=args.slots, mtl=args.mtl,
+                ttft_slo_s=args.ttft_slo_ms / 1e3,
+                tpot_slo_s=args.tpot_slo_ms / 1e3,
+                use_controller=args.controller == "hybrid")
+            warn_truncated(rep)
+            assert rep["conserved"], "request conservation violated"
+            fab = rep["fabric"]
+            print(f"token-engine[{cfg.name}] disagg: "
+                  f"{args.prefill_pool}-member prefill pool over "
+                  f"{fab['interconnect']} "
+                  f"({fab['bw_bps'] / 1e9:.0f} GB/s): goodput "
+                  f"{rep['goodput_tokens_s']:.0f} tok/s, TTFT p95 "
+                  f"{rep['ttft_p95_s'] * 1e3:.0f}ms (attain "
+                  f"{rep['ttft_attainment']:.3f}), TPOT p95 "
+                  f"{rep['tpot_p95_s'] * 1e3:.2f}ms (attain "
+                  f"{rep['tpot_attainment']:.3f}), KV moved "
+                  f"{fab['bytes_moved'] / 1e9:.1f} GB in "
+                  f"{fab['transfers']} transfers "
+                  f"({fab['busy_s'] * 1e3:.0f}ms on the wire)")
+            return
         policies = (["continuous", "static"] if args.token_policy == "both"
                     else [args.token_policy])
         print(f"token-engine[{cfg.name}]: {len(trace)} requests @ "
@@ -257,7 +292,8 @@ def main() -> None:
                 ttft_slo_s=args.ttft_slo_ms / 1e3,
                 tpot_slo_s=args.tpot_slo_ms / 1e3,
                 use_controller=args.controller == "hybrid",
-                prefill_mode=args.prefill_mode)
+                prefill_mode=args.prefill_mode,
+                chunk_tokens=args.prefill_chunk)
             warn_truncated(rep)
             assert rep["conserved"], "request conservation violated"
             reports[pol] = rep

@@ -38,7 +38,10 @@ _DTYPE_BYTES = {
 # bounded dynamic dim, "?" fully dynamic — both degrade conservatively in
 # `_dim_count` (bound / 1) with a warning instead of silently unmatching
 _SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([\d,<=? ]*)\]")
-_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+# computation headers: optimized text prints "%name (args) -> ... {",
+# freshly LOWERED (unoptimized) text prints a bare "name {" with the
+# parameters as explicit parameter(i) instructions — accept both
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*[({]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n"\s*:\s*"(\d+)"')
 
@@ -186,6 +189,30 @@ def _shape_bytes_str(s: str) -> int:
     return total
 
 
+def _operand_names(region: str) -> list:
+    """Operand instruction names inside an operand region.  Optimized
+    text prefixes every name with % ('f32[2]{0} %add.1'); freshly
+    lowered text prints bare names ('add.1, Arg_0.2') — use the %-form
+    when present, else the last token of each top-level comma fragment
+    (the name always trails any inline shape)."""
+    if "%" in region:
+        return re.findall(r"%([\w.\-]+)", region)
+    names, frag, depth = [], [], 0
+    for ch in region + ",":
+        if ch == "," and depth == 0:
+            tok = "".join(frag).strip().split()
+            if tok and re.fullmatch(r"[\w.\-]+", tok[-1]):
+                names.append(tok[-1])
+            frag = []
+            continue
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        frag.append(ch)
+    return names
+
+
 def _operand_region(rhs: str) -> str:
     """Text inside the instruction's operand parens (handles nesting)."""
     i = rhs.find("(")
@@ -261,7 +288,7 @@ def _dot_flops(ins: Instr, symtab: dict) -> float:
     if m.group(2):
         for d in m.group(2).split(","):
             out_elems *= _dim_count(d)
-    ops = re.findall(r"%([\w.\-]+)", _operand_region(ins.rhs))
+    ops = _operand_names(_operand_region(ins.rhs))
     cd_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
     if not ops or not cd_m:
         return 0.0
@@ -282,7 +309,7 @@ def _dot_flops(ins: Instr, symtab: dict) -> float:
 def _operand_bytes(ins: Instr, symtab: dict) -> int:
     region = _operand_region(ins.rhs)
     total = 0
-    for name in re.findall(r"%([\w.\-]+)", region):
+    for name in _operand_names(region):
         total += _shape_bytes_str(symtab.get(name, ""))
     # inline-shaped operands (rare in optimized text)
     if not total:
@@ -324,18 +351,17 @@ def _fusion_bytes(ins: Instr, caller_symtab: dict, callee: Computation) -> int:
             m = re.search(r"parameter\((\d+)\)", ci.rhs)
             if m:
                 param_names[int(m.group(1))] = ci.name
-        for opn in re.findall(r"%([\w.\-]+)", _operand_region(ci.rhs)):
+        for opn in _operand_names(_operand_region(ci.rhs)):
             consumers[opn].append(ci)
         root = ci  # last instr is ROOT in printed HLO
-    call_ops = re.findall(r"%([\w.\-]+)", _operand_region(ins.rhs))
+    call_ops = _operand_names(_operand_region(ins.rhs))
 
     def trace_operand(name: str) -> str:
         """Follow converts/copies/bitcasts back to their source name."""
         seen = 0
         while name in by_name and by_name[name].opcode in (
                 "convert", "copy", "bitcast") and seen < 20:
-            ops_ = re.findall(r"%([\w.\-]+)",
-                              _operand_region(by_name[name].rhs))
+            ops_ = _operand_names(_operand_region(by_name[name].rhs))
             if not ops_:
                 break
             name = ops_[0]
@@ -355,7 +381,7 @@ def _fusion_bytes(ins: Instr, caller_symtab: dict, callee: Computation) -> int:
     eff_root = root
     while (eff_root is not None and eff_root.opcode in ("convert", "copy",
                                                         "bitcast")):
-        ops_ = re.findall(r"%([\w.\-]+)", _operand_region(eff_root.rhs))
+        ops_ = _operand_names(_operand_region(eff_root.rhs))
         if not ops_ or ops_[0] not in by_name:
             break
         eff_root = by_name[ops_[0]]
@@ -363,7 +389,7 @@ def _fusion_bytes(ins: Instr, caller_symtab: dict, callee: Computation) -> int:
     total = 0
     dus_buffer_param: Optional[str] = None
     if eff_root is not None and eff_root.opcode == "dynamic-update-slice":
-        r_ops = re.findall(r"%([\w.\-]+)", _operand_region(eff_root.rhs))
+        r_ops = _operand_names(_operand_region(eff_root.rhs))
         if r_ops:
             dus_buffer_param = trace_operand(r_ops[0])
         upd = callee.symtab.get(r_ops[1], "") if len(r_ops) > 1 else ""
@@ -475,8 +501,7 @@ def analyze_hlo(text: str, f32_as_bf16: bool = True) -> dict:
                     nb = 2 * _shape_bytes_str(ins.result_head)
                 elif op in ("dynamic-update-slice", "scatter"):
                     # in-place: reads + writes the update region only
-                    ops_ = re.findall(r"%([\w.\-]+)",
-                                      _operand_region(ins.rhs))
+                    ops_ = _operand_names(_operand_region(ins.rhs))
                     upd = comp.symtab.get(ops_[1], "") if len(ops_) > 1 else ""
                     nb = 2 * _shape_bytes_str(upd)
                 elif op == "fusion":
@@ -583,8 +608,7 @@ def top_contributors(text: str, k: int = 15, metric: str = "hbm",
                 if op in ("dynamic-slice", "slice", "gather"):
                     val = 2 * _shape_bytes_str(ins.result_head)
                 elif op in ("dynamic-update-slice", "scatter"):
-                    ops_ = re.findall(r"%([\w.\-]+)",
-                                      _operand_region(ins.rhs))
+                    ops_ = _operand_names(_operand_region(ins.rhs))
                     upd = comp.symtab.get(ops_[1], "") if len(ops_) > 1 else ""
                     val = 2 * _shape_bytes_str(upd)
                 elif op == "fusion":
@@ -603,3 +627,41 @@ def top_contributors(text: str, k: int = 15, metric: str = "hbm",
                              ins.rhs[:160]))
     rows.sort(reverse=True)
     return rows[:k]
+
+
+# ---------------------------------------------------------------------------
+# Live-module OPSIG: features from the served module's OWN HLO
+# ---------------------------------------------------------------------------
+def hlo_for_module(model_fn, arg_specs) -> "Optional[str]":
+    """Lower `model_fn` at the given ShapeDtypeStruct specs (abstract —
+    no parameters are ever materialized) and return the module's HLO
+    text, or None on ANY lowering failure.  The unoptimized dialect is
+    enough: the parser above accepts its bare computation headers, and
+    op-class fractions barely move under fusion."""
+    try:
+        import jax
+        lowered = jax.jit(model_fn).lower(*arg_specs)
+        return lowered.compiler_ir("hlo").as_hlo_text()
+    except Exception:  # noqa: BLE001 — lowering failure = no live OPSIG
+        return None
+
+
+def features_for_module(model_fn, arg_specs, *, param_bytes: float,
+                        input_bytes: float = 600e3):
+    """``ModelFeatures`` built from the served module's own HLO — the
+    live replacement for the static OPSIG table: lower the module, run
+    ``analyze_hlo`` over the text, keep the op-class histogram /
+    trip-weighted op count / FLOPs the module actually contains.
+
+    Returns None when lowering fails or the parse yields nothing usable;
+    the caller (``cost_model.features_for_signature``) then falls back
+    to the static table — live first, static as the safety net."""
+    text = hlo_for_module(model_fn, arg_specs)
+    if text is None:
+        return None
+    from repro.perf import cost_model  # deferred: cost_model imports us
+    feat = cost_model.features_from_hlo(text, param_bytes=param_bytes,
+                                        input_bytes=input_bytes)
+    if feat.n_ops <= 1.0 or feat.flops <= 0.0:
+        return None
+    return feat

@@ -89,7 +89,9 @@ from repro.serving.sim_state import SimState
 from repro.serving.workload import ChurnJob, Preemption, make_rate_fn
 
 PLACEMENT_ALPHA = 0.85   # the scalers' hysteresis floor (paper alpha)
-CKPT_TRANSFER_BPS = 8e9  # DCN bandwidth for TPU submesh checkpoint moves
+CKPT_TRANSFER_BPS = dm.DCN_BPS  # DCN bandwidth for TPU submesh checkpoint
+#                          moves — the same 8 GB/s wire the KV-transfer
+#                          fabric's DCN link class prices (device_model.DCN)
 PART_RESIZE_S = 0.25     # modeling default for one partition resize (MPS
 #                          set-percentage / MIG reconfigure): the contexts
 #                          keep running — no kill+relaunch round — so it is
@@ -279,7 +281,9 @@ class ClusterEngine:
                  power_policy: Optional[str] = None,
                  preemptions: Optional[Sequence] = None,
                  record: Optional[str] = None, record_store=None,
-                 record_meta: Optional[dict] = None):
+                 record_meta: Optional[dict] = None,
+                 retrain_every_rows: int = 8,
+                 power_price_fn: Optional[Callable] = None):
         if partition not in (None, "mps", "mig"):
             raise ValueError(f"unknown partition kind {partition!r}")
         if power_policy not in (None, "pack", "spread"):
@@ -376,6 +380,20 @@ class ClusterEngine:
                     self.store_report["cost_model"] = \
                         sorted(self.cost_models)
 
+        # online cost-model retraining: every surface row persisted by a
+        # drain or forced kill counts as FRESH training data; once a device
+        # class accrues `retrain_every_rows` of them the class model is
+        # refit from the store at drain time (train_cost_model itself
+        # enforces its minimum-row floor, so a retrain never fires thin)
+        self.retrain_every_rows = int(retrain_every_rows)
+        self._fresh_rows: dict = {}       # device class -> rows since fit
+        self.retrains: dict = {}          # device class -> refit count
+        # carbon-aware power pricing: a time-varying $/J signal integrated
+        # over each device's powered intervals (plus the dynamic joules
+        # accrued while stepping).  None prices nothing and changes nothing.
+        self.power_price_fn = power_price_fn
+        self._price_ref: Optional[float] = None
+
         self.stall_time = 0.0
         self.compile_stall_s = 0.0
         self.migration_stall_s = 0.0
@@ -403,6 +421,11 @@ class ClusterEngine:
         self._dev_dynamic_j = [0.0] * len(fleet)
         self._dev_powered_s = [0.0] * len(fleet)
         self._dev_on_since: List[Optional[float]] = [None] * len(fleet)
+        # closed powered intervals, kept so a time-varying power price can
+        # be integrated over them in report(); the dynamic-cost ledger
+        # accrues alongside dynamic joules at each step's own clock
+        self._dev_intervals: List[list] = [[] for _ in fleet]
+        self._dynamic_cost_usd = 0.0
         # spot revocations: (time, kind, Preemption) events consumed in
         # timestamp order interleaved with pending admissions
         self._cap_events: list = []
@@ -739,6 +762,34 @@ class ClusterEngine:
                                                               self.fleet[d])
         return total
 
+    # -- carbon-aware power pricing -----------------------------------------
+    def _power_price(self, at: float) -> float:
+        return float(self.power_price_fn(max(at, 0.0)))
+
+    def _price_reference(self) -> float:
+        """Lazy mean of the price signal over the run horizon (a day when
+        the horizon is open) — the flat level the pack deferral compares
+        against."""
+        if self._price_ref is None:
+            end = self._horizon if np.isfinite(self._horizon) else 86_400.0
+            ts = np.linspace(0.0, max(float(end), 1.0), 97)
+            self._price_ref = float(np.mean([self._power_price(t)
+                                             for t in ts]))
+        return self._price_ref
+
+    def _effective_power_policy(self, at: float) -> Optional[str]:
+        """The packing objective in force at time `at`.  Under a
+        time-varying power price, a `pack` fleet DEFERS consolidation
+        while energy is cheap (price at or below half the signal's mean):
+        power-gating an empty device saves little off-peak while the
+        migrations it forces cost the same, so placements fall back to
+        the neutral key until the price recovers.  Flat pricing
+        (`power_price_fn=None`) and `spread` are untouched."""
+        if (self.power_price_fn is not None and self.power_policy == "pack"
+                and self._power_price(at) <= 0.5 * self._price_reference()):
+            return None
+        return self.power_policy
+
     def _choose_device(self, job, rate: Optional[float],
                        res_info: List[List[tuple]],
                        *, at: float, with_disruption: bool = False) -> int:
@@ -771,7 +822,7 @@ class ClusterEngine:
             return sum(rj.profile().occupancy for rj, _ in res_info[d])
 
         def pack(d: int) -> tuple:
-            return pt.packing_key(self.power_policy,
+            return pt.packing_key(self._effective_power_policy(at),
                                   occupied=bool(res_info[d]), fill=load(d))
 
         if not self.anticipate:
@@ -829,6 +880,7 @@ class ClusterEngine:
                 self._dev_on_since[d] = t
         elif on is not None:
             self._dev_powered_s[d] += max(t - on, 0.0)
+            self._dev_intervals[d].append((on, max(t, on)))
             self._dev_on_since[d] = None
 
     def _charge_migration(self, j: int, d: int, k: int, *, at: float,
@@ -1070,7 +1122,7 @@ class ClusterEngine:
             feasible = lat <= PLACEMENT_ALPHA * job.slo_s
             load = sum(self.states[j].job.profile().occupancy
                        for j in self.residents[d])
-            pack = pt.packing_key(self.power_policy,
+            pack = pt.packing_key(self._effective_power_policy(at),
                                   occupied=bool(self.residents[d]),
                                   fill=1.0 - head)
             scored.append(((not feasible, needs_shrink) + pack
@@ -1572,12 +1624,49 @@ class ClusterEngine:
             return False
         # only wall-clock latencies depend on the tuned tiles; simulated
         # rows are exempt from the generation staleness gate on reload
-        return self.profile_store.persist_surface(
+        dc = self.fleet[d].device.name
+        wrote = self.profile_store.persist_surface(
             self.surface_library, key,
             signature=f"{st.job.dnn}/{st.job.dataset}",
-            device_class=self.fleet[d].device.name,
+            device_class=dc,
             autotune_generation=autotune.generation(),
             tile_dependent=hasattr(st.executor, "cache_stats"))
+        if wrote:
+            self._fresh_rows[dc] = self._fresh_rows.get(dc, 0) + 1
+            self._maybe_retrain(dc)
+        return wrote
+
+    def _maybe_retrain(self, dc: str) -> None:
+        """Online cost-model retraining: once `retrain_every_rows` fresh
+        surface rows accrued for a device class since its last fit, refit
+        the class's learned HLO model from the store right here at drain
+        time.  `train_cost_model` keeps its own minimum-row floor, so a
+        refit never fires on thinner history than a cold fit would accept;
+        a fit that comes back None (rows persisted but too few usable)
+        leaves the fresh-row counter alone and retries at the next drain."""
+        if self._fresh_rows.get(dc, 0) < self.retrain_every_rows:
+            return
+        device = next((spec.device for spec in self.fleet
+                       if spec.device.name == dc), None)
+        model = cost_model_mod.train_cost_model(
+            self.profile_store, dc, device=device,
+            autotune_generation=autotune.generation())
+        if model is None:
+            return
+        cost_model_mod.save_cost_model(self.profile_store, model)
+        self.cost_models[dc] = model
+        self._fresh_rows[dc] = 0
+        self.retrains[dc] = self.retrains.get(dc, 0) + 1
+        if self.surface_library is not None:
+            # same election as boot: the shared library serves the model
+            # of the fleet's most common device class that has one
+            counts: dict = {}
+            for spec in self.fleet:
+                counts[spec.device.name] = counts.get(spec.device.name,
+                                                      0) + 1
+            primary = max(self.cost_models,
+                          key=lambda c: counts.get(c, 0))
+            self.surface_library.set_cost_model(self.cost_models[primary])
 
     def _persist_profiles(self) -> None:
         """End of run: every still-resident tenancy's surface row joins the
@@ -1639,8 +1728,10 @@ class ClusterEngine:
                 res["step_time"])
         # per-device dynamic energy (the idle floor is charged per powered
         # interval in report(), never per co-resident step)
-        self._dev_dynamic_j[self.placement[i]] += \
-            res.get("dynamic_power_w", res["power_w"]) * res["step_time"]
+        dyn_j = res.get("dynamic_power_w", res["power_w"]) * res["step_time"]
+        self._dev_dynamic_j[self.placement[i]] += dyn_j
+        if self.power_price_fn is not None:
+            self._dynamic_cost_usd += self._power_price(st.clock) * dyn_j
         t1 = st.clock + res["step_time"]
         slo = st.job.slo_s
         if st.oq is not None:            # open loop: queue + conservation
@@ -1864,6 +1955,27 @@ class ClusterEngine:
                      for d in range(len(self.fleet)))
         dynamic_j = float(sum(self._dev_dynamic_j))
         energy_j = idle_j + dynamic_j
+        # carbon-aware power cost: integrate the $/J signal over every
+        # powered interval at each device's idle floor (trapezoid over the
+        # closed intervals plus any still open at the makespan), and add
+        # the dynamic-cost ledger accrued at each step's own clock
+        power_cost = None
+        if self.power_price_fn is not None:
+            idle_cost = 0.0
+            for d in range(len(self.fleet)):
+                ivs = list(self._dev_intervals[d])
+                on = self._dev_on_since[d]
+                if on is not None:
+                    ivs.append((on, max(makespan, on)))
+                for t0, t1 in ivs:
+                    if t1 <= t0:
+                        continue
+                    ts = np.linspace(t0, t1, 65)
+                    ps = np.asarray([self._power_price(t) for t in ts])
+                    trapezoid = getattr(np, "trapezoid", np.trapz)
+                    idle_cost += float(trapezoid(ps, ts)) \
+                        * self.fleet[d].device.idle_w
+            power_cost = idle_cost + self._dynamic_cost_usd
         return {
             "per_job": per_job,
             "aggregate": {
@@ -1898,6 +2010,13 @@ class ClusterEngine:
                 "joules_per_good_request":
                     (float(energy_j / goodput_items)
                      if goodput_items > 0 else None),
+                "power_cost_usd": (float(power_cost)
+                                   if power_cost is not None else None),
+                "cost_per_good_request":
+                    (float(power_cost / goodput_items)
+                     if power_cost is not None and goodput_items > 0
+                     else None),
+                "cost_model_retrains": dict(self.retrains),
                 "preemptions": int(self.preemptions_fired),
                 "preempt_evacuated": int(self.preempt_evacuated),
                 "preempt_killed": int(self.preempt_killed),
@@ -2107,6 +2226,9 @@ class VectorClusterEngine(ClusterEngine):
                                        energy_j=power_w * busy,
                                        request_latencies=req, slo=slo)
                     self._dev_dynamic_j[self.placement[i]] += dyn_w * busy
+                    if self.power_price_fn is not None:
+                        self._dynamic_cost_usd += \
+                            self._power_price(clock) * dyn_w * busy
                     clock += busy
                     st.executor.clock += busy
                     job_steps += n_acc
@@ -2209,6 +2331,9 @@ class VectorClusterEngine(ClusterEngine):
                                        request_latencies=req, slo=slo[i])
                     self._dev_dynamic_j[self.placement[i]] += \
                         float(dyn_w[i]) * busy
+                    if self.power_price_fn is not None:
+                        self._dynamic_cost_usd += self._power_price(
+                            float(clock[i])) * float(dyn_w[i]) * busy
                     clock[i] += busy
                     st.executor.clock += busy
                     job_steps[i] += na
@@ -2439,14 +2564,21 @@ def run_scenario_cluster(traffic: str = "steady", *,
                          preemptions: Optional[Sequence] = None,
                          trace_kwargs: Optional[dict] = None,
                          record: Optional[str] = None,
-                         record_store=None) -> dict:
+                         record_store=None,
+                         power_price_fn: Optional[Callable] = None) -> dict:
     """One cell of the scenario matrix: {steady, diurnal, flash-crowd}
     traffic x {fixed, spot} capacity x {None, pack, spread} packing —
     served by the MPS partition planner with the HybridScaler's share
     axis active.  Spot cells revoke each spot device once mid-run (with
     a restore), exercising evacuation under the traffic shape; the
     report's `energy_j` / `joules_per_good_request` expose what the
-    packing objective buys at the diurnal trough."""
+    packing objective buys at the diurnal trough.
+
+    `power_price_fn` (time -> $/J) arms carbon-aware pricing: the report
+    gains `power_cost_usd` / `cost_per_good_request` (the signal
+    integrated over each device's powered intervals plus per-step dynamic
+    joules), and a `pack` fleet defers power-gating consolidation while
+    the price sits at or below half the signal's mean."""
     from repro.serving.workload import (scenario_trace,
                                         spot_revocation_trace)
     if traffic not in SCENARIO_TRAFFICS:
@@ -2473,6 +2605,7 @@ def run_scenario_cluster(traffic: str = "steady", *,
             mode, max_mtl=max_mtl, share_ladder=pt.share_ladder("mps")),
         partition="mps", seed=seed,
         power_policy=power_policy, preemptions=preemptions,
+        power_price_fn=power_price_fn,
         record=record, record_store=record_store,
         record_meta={"entry": "scenario", "traffic": traffic,
                      "spot": bool(spot), "power_policy": power_policy,

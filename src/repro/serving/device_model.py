@@ -68,6 +68,59 @@ TESLA_P40 = Device("tesla-p40", 11.76e12, 346e9, 24e9, 50.0, 250.0)
 TPU_V5E = Device("tpu-v5e", 197e12, 819e9, 16e9, 60.0, 220.0)
 
 
+# ---------------------------------------------------------------------------
+# Interconnect model (the KV-transfer fabric's link classes).
+#
+# Disaggregated prefill/decode serving moves finished KV caches between
+# devices; each link class is a bandwidth plus a per-transfer latency floor
+# (setup, routing, the first-byte cost a tiny transfer cannot amortize):
+#
+#     transfer_s(bytes) = latency_s + bytes / bw_bps
+#
+# DCN reuses the 8 GB/s TPU checkpoint-transfer constant the cluster engine
+# already charges for submesh checkpoint moves (cluster.CKPT_TRANSFER_BPS) —
+# the same wire carries both.
+# ---------------------------------------------------------------------------
+DCN_BPS = 8e9   # == cluster.CKPT_TRANSFER_BPS (checkpoint moves share the wire)
+
+
+@dataclasses.dataclass(frozen=True)
+class Interconnect:
+    name: str
+    bw_bps: float       # sustained link bandwidth
+    latency_s: float    # per-transfer latency floor
+
+    def transfer_s(self, nbytes: float) -> float:
+        """Seconds to move `nbytes` over this link (the analytic fabric
+        formula the KVTransferFabric accounting is pinned against)."""
+        return self.latency_s + nbytes / self.bw_bps
+
+
+NVLINK = Interconnect("nvlink", 300e9, 5e-6)
+PCIE_4 = Interconnect("pcie4", 32e9, 20e-6)
+ICI = Interconnect("ici", 100e9, 10e-6)          # TPU inter-chip interconnect
+DCN = Interconnect("dcn", DCN_BPS, 1e-3)         # cross-host data-center net
+
+INTERCONNECTS = {ic.name: ic for ic in (NVLINK, PCIE_4, ICI, DCN)}
+
+# per-device-class link used for same-pool KV handoff (P40 boards have no
+# NVLink; v5e pods move KV over ICI); unknown classes fall back to DCN
+_DEVICE_INTERCONNECT = {
+    "tesla-p40": "pcie4",
+    "tpu-v5e": "ici",
+}
+
+
+def interconnect_for(device_name: str) -> Interconnect:
+    """The KV-handoff link for one device class (DCN when unknown)."""
+    return INTERCONNECTS[_DEVICE_INTERCONNECT.get(device_name, "dcn")]
+
+
+def kv_transfer_time(ic: Interconnect, nbytes: float) -> float:
+    """Module-level alias of `Interconnect.transfer_s` (test surface)."""
+    return ic.transfer_s(nbytes)
+
+
 @dataclasses.dataclass(frozen=True)
 class JobProfile:
     name: str

@@ -170,19 +170,27 @@ class SimExecutor:
 
     # -- token engine --------------------------------------------------------
     def token_step_latency(self, live_slots: int, mtl: int = 1,
-                           prefill_tenants: int = 0) -> float:
+                           prefill_tenants: int = 0,
+                           extra_slots: float = 0.0) -> float:
         """Mean decode-step latency with `live_slots` slots occupied.
 
         A co-scheduled prefill ("cotenant" prefill mode) is priced as an
         extra spatial tenant on TOP of any configured partition slice —
         the same cross-tenant interference terms the partition model
-        calibrates against the paper's MTL curves."""
-        key = (live_slots, mtl, prefill_tenants)
+        calibrates against the paper's MTL curves.
+
+        `extra_slots` ("chunked" prefill mode) piggybacks a prefill chunk
+        into the step as fractional decode-token equivalents: the step is
+        priced as a batch of `live_slots + extra_slots` on the same grid
+        (the grids are float-polymorphic, so 16 + 0.0 prices bit-identical
+        to 16 — the default is an exact no-op)."""
+        key = (live_slots, mtl, prefill_tenants, extra_slots)
         lat = self._tok_cache.get(key)
         if lat is None:
             ts = self.partition
             lat = float(dm.token_latency_grid(
-                self.device, self.profile, [live_slots], [mtl],
+                self.device, self.profile, [live_slots + extra_slots],
+                [mtl],
                 inv_share=ts.inv_share if ts is not None else 1.0,
                 tenants=(ts.tenants if ts is not None else 1)
                 + prefill_tenants,
@@ -191,9 +199,13 @@ class SimExecutor:
         return lat
 
     def run_token_step(self, live_slots: int, mtl: int = 1, *,
-                       prefill_tenants: int = 0) -> dict:
-        """Simulate one decode step: every live slot emits one token."""
-        mean = self.token_step_latency(live_slots, mtl, prefill_tenants)
+                       prefill_tenants: int = 0,
+                       extra_slots: float = 0.0) -> dict:
+        """Simulate one decode step: every live slot emits one token (a
+        nonzero `extra_slots` also advances piggybacked prefill chunks —
+        priced into the step, not counted as output tokens)."""
+        mean = self.token_step_latency(live_slots, mtl, prefill_tenants,
+                                       extra_slots)
         lat = float(self.sampler.sample(mean, n=1)[0])
         self.clock += lat
         tokens = live_slots * mtl
@@ -436,13 +448,18 @@ class RealExecutor:
 
     # -- token engine --------------------------------------------------------
     def run_token_step(self, live_slots: int, mtl: int = 1, *,
-                       prefill_tenants: int = 0) -> dict:
+                       prefill_tenants: int = 0,
+                       extra_slots: float = 0.0) -> dict:
         """One measured decode step with `live_slots` slots occupied: the
         jitted callable IS the decode-step function, and the bucketed AOT
         ladder doubles as the slot ladder (a step at 37 live slots runs
         the 48-slot executable; padding slots don't count as tokens).
         A co-resident prefill on this single-process host shares the wall
-        clock it is measured on, so no extra pricing term is added."""
-        r = self.run_step(live_slots, mtl)
-        r["tokens"] = r["items"]
+        clock it is measured on, so no extra pricing term is added.
+        Chunked-prefill `extra_slots` widen the measured batch (rounded up
+        to whole rows) without counting as output tokens."""
+        width = live_slots + int(np.ceil(extra_slots))
+        r = self.run_step(width, mtl)
+        r["tokens"] = live_slots * mtl
+        r["items"] = r["tokens"]
         return r

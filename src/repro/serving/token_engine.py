@@ -111,14 +111,18 @@ def memory_slot_cap(executor, max_slots: int, mtl: int = 1) -> int:
 
 def build_token_controller(executor, tpot_slo_s: float, *,
                            max_slots: int = 64, mtl: int = 1,
-                           share_ladder=None) -> HybridScaler:
+                           share_ladder=None,
+                           pool_ladder=None) -> HybridScaler:
     """HybridScaler over live slots: `bs` IS the slot cap, seeded from the
     priced token-latency surface so infeasible slot counts are pinned
     before a single over-SLO step is served.  With a `share_ladder` the
     scaler trades live slots against co-tenant device shares with the
-    same coordinate-descent/pin machinery as whole-request serving."""
+    same coordinate-descent/pin machinery as whole-request serving; a
+    `pool_ladder` arms the prefill-pool-ratio axis the disaggregated
+    engine drives (see `serving.disagg.run_disagg`)."""
     scaler = HybridScaler(tpot_slo_s, primary="B", max_bs=max_slots,
-                          max_mtl=mtl, share_ladder=share_ladder)
+                          max_mtl=mtl, share_ladder=share_ladder,
+                          pool_ladder=pool_ladder)
     slots = [s for s in (1, 2, 4, 8, 12, 16, 24, 32, 48, 64, 96, 128)
              if s <= max_slots]
     surface = np.stack([
@@ -136,6 +140,8 @@ def run_continuous(trace: Sequence[TokenRequest], executor, *,
                    ttft_slo_s: float, tpot_slo_s: float,
                    controller: Optional[HybridScaler] = None,
                    prefill_mode: str = "cotenant",
+                   chunk_tokens: int = 256,
+                   decode_token_equiv: float = 16.0,
                    max_queue: Optional[int] = None,
                    max_steps: int = 2_000_000) -> dict:
     """Serve `trace` with slot-based continuous batching.
@@ -147,8 +153,16 @@ def run_continuous(trace: Sequence[TokenRequest], executor, *,
         its prefill completes.
       * "timeslice" — prefill runs serially on the tenant's own clock;
         decode stalls for `prefill_ms` per admission.
+      * "chunked"   — prefill is split into fixed token-budget chunks
+        piggybacked into decode steps: each step advances up to
+        `chunk_tokens` prefill tokens (FIFO across pending prompts),
+        priced as `len(live) + chunk_tokens / decode_token_equiv` on the
+        existing token-latency grid (`decode_token_equiv` prefill tokens
+        cost one decode-token equivalent — prefill is compute-dense where
+        decode is weight-streaming bound).  A prompt's slot goes live the
+        step its last chunk lands; decode never stalls.
     """
-    if prefill_mode not in ("cotenant", "timeslice"):
+    if prefill_mode not in ("cotenant", "timeslice", "chunked"):
         raise ValueError(prefill_mode)
     trace = [dataclasses.replace(r) for r in trace]   # engines never share
     prof = executor.profile
@@ -192,6 +206,7 @@ def run_continuous(trace: Sequence[TokenRequest], executor, *,
                 cur_share = s
         # 3. admit-on-free-slot into the RUNNING batch
         cap = slot_cap()
+        chunked = prefill_mode == "chunked"
         while queue and len(live) + len(pending) < cap:
             req = queue.popleft()
             req.admit_s = clock
@@ -199,10 +214,12 @@ def run_continuous(trace: Sequence[TokenRequest], executor, *,
                 clock += prefill_s          # decode stalls on this tenant
                 req.first_token_s = clock
                 live.append([req, req.decode_tokens])
+            elif chunked:                   # prompt joins the chunk queue
+                pending.append([req, max(int(req.prefill_tokens), 1)])
             else:
                 pending.append([req, clock + prefill_s])
         # 4. activate co-resident prefills that completed
-        if pending:
+        if pending and not chunked:
             still = []
             for req, done_t in pending:
                 if done_t <= clock:
@@ -211,19 +228,44 @@ def run_continuous(trace: Sequence[TokenRequest], executor, *,
                 else:
                     still.append([req, done_t])
             pending = still
-        # 5. one decode step: every live slot emits one token
-        if live:
-            r = executor.run_token_step(len(live), mtl,
-                                        prefill_tenants=len(pending))
-            lat = r["step_time"]
+        # 5. one decode step: every live slot emits one token (chunked
+        #    mode also advances up to `chunk_tokens` prefill tokens)
+        if live or (chunked and pending):
+            extra = 0.0
+            if chunked and pending:
+                budget = chunk_tokens       # FIFO within the chunk budget
+                for rec in pending:
+                    if budget <= 0:
+                        break
+                    take = min(budget, rec[1])
+                    rec[1] -= take
+                    budget -= take
+                extra = (chunk_tokens - budget) / decode_token_equiv
+            if live:
+                r = executor.run_token_step(
+                    len(live), mtl,
+                    prefill_tenants=0 if chunked else len(pending),
+                    extra_slots=extra)
+                lat = r["step_time"]
+                power = r["power_w"]
+            else:
+                # chunked prefill-only step: no slot decodes; the chunk is
+                # priced alone on the same grid (a batch of `extra`
+                # decode-token equivalents, power at the bs=1 draw)
+                mean = executor.token_step_latency(0, mtl, 0, extra)
+                lat = float(executor.sampler.sample(mean, n=1)[0])
+                executor.clock += lat
+                power = executor.power_terms(1, mtl)[0]
             clock += lat
             steps += 1
             tokens_out += len(live) * mtl
-            energy_j += r["power_w"] * lat
-            window.add_many(np.full(min(len(live), 64), lat))
-            if controller is not None:
-                controller.observe(window.p95,
-                                   {"items": len(live), "step_time": lat})
+            energy_j += power * lat
+            if live:
+                window.add_many(np.full(min(len(live), 64), lat))
+                if controller is not None:
+                    controller.observe(window.p95,
+                                       {"items": len(live),
+                                        "step_time": lat})
             still = []
             for rec in live:
                 rec[1] -= 1
@@ -235,6 +277,15 @@ def run_continuous(trace: Sequence[TokenRequest], executor, *,
                 else:
                     still.append(rec)
             live = still
+            if chunked and pending:
+                still_p = []
+                for rec in pending:
+                    if rec[1] <= 0:         # last chunk landed: KV is live
+                        rec[0].first_token_s = clock
+                        live.append([rec[0], rec[0].decode_tokens])
+                    else:
+                        still_p.append(rec)
+                pending = still_p
         elif pending:                       # idle until a prefill lands
             clock = min(done_t for _, done_t in pending)
             continue
@@ -366,6 +417,8 @@ def run_token_serving(profile: dm.JobProfile, *, policy: str = "continuous",
                       use_controller: bool = False,
                       share_ladder=None,
                       prefill_mode: str = "cotenant",
+                      chunk_tokens: int = 256,
+                      decode_token_equiv: float = 16.0,
                       max_queue: Optional[int] = None,
                       executor=None) -> dict:
     """One decode job served token by token — the `serve.py --token-engine`
@@ -390,6 +443,8 @@ def run_token_serving(profile: dm.JobProfile, *, policy: str = "continuous",
     return run_continuous(trace, executor, max_slots=max_slots, mtl=mtl,
                           ttft_slo_s=ttft_slo_s, tpot_slo_s=tpot_slo_s,
                           controller=controller, prefill_mode=prefill_mode,
+                          chunk_tokens=chunk_tokens,
+                          decode_token_equiv=decode_token_equiv,
                           max_queue=max_queue)
 
 

@@ -101,6 +101,24 @@ def llm_serving_jobs(slo_scale: float = 4.0, *, job_id_base: int = 900,
     return jobs
 
 
+def long_prefill_trace(n_requests: int = 300, seed: int = 0, *,
+                       rate_rps: float = 12.0, prefill_mean: int = 2048,
+                       decode_mean: int = 96, decode_sigma: float = 0.8):
+    """Long-prompt ragged decode trace (summarization / RAG style):
+    prompts average `prefill_mean` >= 2048 tokens while outputs stay
+    short — the regime where prompt processing, not decode, owns the
+    device and prefill/decode disaggregation pays (serving/disagg.py,
+    benchmarks/disagg_benches.py)."""
+    from repro.serving.token_engine import ragged_decode_trace
+    if prefill_mean < 2048:
+        raise ValueError("long_prefill_trace is the long-prompt regime: "
+                         "prefill_mean >= 2048")
+    return ragged_decode_trace(n_requests, seed, rate_rps=rate_rps,
+                               prefill_mean=prefill_mean,
+                               decode_mean=decode_mean,
+                               decode_sigma=decode_sigma)
+
+
 # ---------------------------------------------------------------------------
 # Online churn traces: per-job admit/depart times over a horizon.
 # ---------------------------------------------------------------------------

@@ -151,3 +151,51 @@ def test_cluster_bench_bit_identical_with_empty_profile_store(tmp_path):
     committed = _committed("cluster")
     for row in committed["rows"]:
         assert fresh.get(row["name"]) == row["derived"], row["name"]
+
+
+@pytest.mark.slow
+def test_disagg_bench_matches_committed_baseline():
+    """The disagg suite is pinned like the other baselines, and the
+    committed BENCH_disagg.json itself must already show the PR's
+    contracts: fleet >= 1.3x the best single-device mode with both SLO
+    attainments >= 0.95 on the gated cells, chunked >= 1.1x co-tenant
+    TTFT attainment at equal TPOT, and exact fabric accounting."""
+    committed = _committed("disagg")
+    rows = {r["name"]: _parse_metrics(r["derived"])
+            for r in committed["rows"]}
+    text = {r["name"]: r["derived"] for r in committed["rows"]}
+
+    fleet = next(m for n, m in rows.items() if n.startswith("disagg/fleet/"))
+    assert fleet["ttft_attain"] >= 0.95 and fleet["tpot_attain"] >= 0.95
+    assert rows["disagg/fleet_vs_single"]["speedup"] >= 1.3
+    chunk = next(m for n, m in rows.items()
+                 if n.startswith("disagg/chunked/"))
+    assert chunk["ttft_attain"] >= 0.95 and chunk["tpot_attain"] >= 0.95
+    assert rows["disagg/chunked_vs_cotenant"]["speedup"] >= 1.1
+    assert "tpot_equal=yes" in text["disagg/chunked_vs_cotenant"]
+    assert rows["disagg/fabric/ici_exact"]["maxerr"] <= 1e-12
+    for name, derived in text.items():
+        if "conserved=" in derived:
+            assert "conserved=yes" in derived, name
+    # re-running the suite (with its in-process contract asserts) must
+    # hold within the same gate CI applies
+    assert check_against(REPO, tol=0.10, only={"disagg"}) == 0
+
+
+@pytest.mark.slow
+def test_tokens_bench_bit_identical_with_disagg_off(tmp_path):
+    """The disaggregation/chunked-prefill additions must be EXACT no-ops
+    on the PR 9 token paths: with disagg off (the defaults), a fresh
+    tokens-bench run reproduces every committed BENCH_tokens.json derived
+    metric string byte for byte — engines are deterministic per seed, so
+    any drift means the new knobs leaked into co-tenant/static pricing."""
+    import os
+    os.environ["REPRO_PROFILE_STORE"] = str(tmp_path)
+    try:
+        from benchmarks.token_benches import bench_tokens
+        fresh = {name: derived for name, _, derived in bench_tokens()}
+    finally:
+        os.environ.pop("REPRO_PROFILE_STORE", None)
+    committed = _committed("tokens")
+    for row in committed["rows"]:
+        assert fresh.get(row["name"]) == row["derived"], row["name"]

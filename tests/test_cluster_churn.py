@@ -343,8 +343,10 @@ def test_real_executor_churn_calibrated_migrations(tmp_path):
                         instance_launch_s=0.5, instance_kill_s=0.1,
                         seed=0, max_queue=500)
     # the budget must cover the pre-admission serving (hundreds of
-    # ~0.2 ms lockstep steps per simulated 50 ms, MORE on a faster host)
-    rep = eng.run(sim_time_limit=6.0, max_steps=8000)
+    # ~0.2 ms lockstep steps per simulated 50 ms, MORE on a faster
+    # host — a warm process can dispatch in tens of microseconds, so
+    # leave generous headroom; sim_time_limit still bounds the run)
+    rep = eng.run(sim_time_limit=6.0, max_steps=60000)
 
     _assert_conserved(rep)
     agg = rep["aggregate"]
@@ -367,3 +369,52 @@ def test_real_executor_churn_calibrated_migrations(tmp_path):
     # measurements persisted for the NEXT process
     store2 = ProfileStore(str(tmp_path))
     assert store2.migration_cost(key) is not None
+
+
+# ---------------------------------------------------------------------------
+# Online cost-model retraining: surface rows persisted at drain time accrue
+# per device class, and once `retrain_every_rows` fresh ones land the class
+# model refits from the store AT DRAIN — never with fewer usable rows than
+# a cold `train_cost_model` fit would accept, and always on strictly more
+# rows than the previous fit (the store only grows within a run).
+# ---------------------------------------------------------------------------
+def test_online_retrain_grows_rows_and_respects_min_floor(tmp_path,
+                                                          monkeypatch):
+    from repro.core.matrix_completion import SurfaceLibrary
+    from repro.perf import cost_model as cm
+    from repro.perf.profile_store import ProfileStore
+    from repro.serving.cluster import paper_controller_factory
+    from repro.serving.workload import churn_trace
+
+    store = ProfileStore(str(tmp_path))
+    lib = SurfaceLibrary()
+    calls = []
+    real = cm.train_cost_model
+
+    def recording(st, dc, **kw):
+        model = real(st, dc, **kw)
+        calls.append((dc, None if model is None else model.n_rows))
+        return model
+
+    monkeypatch.setattr(
+        "repro.serving.cluster.cost_model_mod.train_cost_model", recording)
+    trace = churn_trace(horizon_s=60.0, n_initial=4, n_churn=8,
+                        mean_lifetime_s=15.0, include_llm=False, seed=2)
+    eng = ClusterEngine([], gpu_fleet(3), churn=trace,
+                        controller_factory=paper_controller_factory(
+                            "hybrid", surface=lib),
+                        surface_library=lib, profile_store=store,
+                        retrain_every_rows=2, seed=0)
+    rep = eng.run(sim_time_limit=60.0)
+    _assert_conserved(rep)
+
+    fits = [n for _, n in calls if n is not None]
+    assert fits, "no online retrain ever fired"
+    assert rep["aggregate"]["cost_model_retrains"] == {"tesla-p40": len(fits)}
+    # the minimum-row floor held on every fit, thin attempts came back None
+    assert all(n >= 4 for n in fits)
+    # each successive refit saw strictly more training rows
+    assert all(b > a for a, b in zip(fits, fits[1:]))
+    # the refit landed: the engine serves the new model and persisted it
+    assert "tesla-p40" in eng.cost_models
+    assert cm.load_cost_model(store, "tesla-p40") is not None

@@ -179,3 +179,44 @@ def test_warm_start_beats_refusal_path_in_probes(records):
     probes_model, probes_refusal, steady, _ = warmstart_scenario(records)
     assert probes_model < probes_refusal
     assert steady[1] >= 2            # a real MT climb, not a trivial point
+
+
+# ---------------------------------------------------------------------------
+# OPSIG from the served module's own HLO: the gemma2-2b signature must
+# resolve through a LIVE lowering (op counts and histogram from the real
+# decode module, nothing like the static depth-scaled fingerprint), and
+# fall back to the static table when lowering is unavailable
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_gemma2_decode_signature_resolves_via_live_hlo():
+    from repro.configs.base import get_config
+
+    cfg = get_config("gemma2-2b")
+    static_n_ops, static_hist = cm._llm_opsig(cfg)
+    feat = cm.features_for_signature("gemma2-2b/decode")
+    assert feat is not None
+    # a real lowered module has far more ops than 14 x num_layers, and
+    # its op-class mix is measured, not the canned (0.55, 0.35, 0.10)
+    assert feat.n_ops > 2 * static_n_ops
+    assert feat.op_hist != pytest.approx(static_hist)
+    assert abs(sum(feat.op_hist) - 1.0) < 1e-6
+    assert feat.flops > 0
+    # memoized: the second resolution is the same object, no re-lowering
+    assert cm.features_for_signature("gemma2-2b/decode") is feat
+
+
+def test_live_hlo_falls_back_to_static_fingerprint(monkeypatch):
+    from repro.configs.base import get_config
+
+    cfg = get_config("gemma2-2b")
+    monkeypatch.setitem(cm._MODULE_FEATURES, ("gemma2-2b", "prefill"), None)
+    monkeypatch.setattr("repro.perf.hlo_analysis.hlo_for_module",
+                        lambda *a, **k: None)
+    cm._MODULE_FEATURES.pop(("gemma2-2b", "prefill"), None)
+    feat = cm.features_for_signature("gemma2-2b/prefill")
+    assert feat is not None
+    n_ops, hist = cm._llm_opsig(cfg)
+    assert feat.n_ops == pytest.approx(n_ops)
+    assert feat.op_hist == pytest.approx(hist)
+    # don't leave the poisoned memo behind for other tests
+    cm._MODULE_FEATURES.pop(("gemma2-2b", "prefill"), None)

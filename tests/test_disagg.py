@@ -1,0 +1,257 @@
+"""Disaggregated prefill/decode subsystem tests: the interconnect model's
+analytic transfer times, KV-transfer fabric pricing/accounting, prefill
+pool routing, request conservation through the disagg engine (including
+mid-transfer pool revocation), chunked-prefill conservation, and the
+HybridScaler's pool-ratio axis."""
+
+import math
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.scaler import HybridScaler
+from repro.serving import device_model as dm
+from repro.serving.disagg import (KVTransferFabric, PrefillPool, fabric_for,
+                                  place_disagg_fleet, run_disagg_cluster,
+                                  run_disagg_serving)
+from repro.serving.token_engine import ragged_decode_trace, run_token_serving
+from repro.serving.workload import long_prefill_trace
+
+CFG = get_config("gemma2-2b")
+PROF = dm.llm_profile(CFG, mode="decode", kv_seq_budget=1024)
+
+
+def _conserved(rep):
+    assert rep["submitted"] == (rep["completed"] + rep["rejected"]
+                                + rep["backlog"]), rep
+    assert rep["conserved"]
+
+
+# ---------------------------------------------------------------------------
+# interconnect model: analytic latency floor + bytes/bandwidth
+# ---------------------------------------------------------------------------
+def test_interconnect_transfer_time_is_latency_plus_bandwidth():
+    ic = dm.interconnect_for("tpu-v5e")
+    for nbytes in (0.0, 1e6, 218e6, 4e9):
+        assert ic.transfer_s(nbytes) == pytest.approx(
+            ic.latency_s + nbytes / ic.bw_bps, rel=1e-15)
+    # more bytes never transfer faster
+    assert ic.transfer_s(2e9) > ic.transfer_s(1e9)
+
+
+def test_dcn_reuses_checkpoint_transfer_bandwidth():
+    from repro.serving.cluster import CKPT_TRANSFER_BPS
+    dcn = dm.interconnect_for("unknown-device-class")
+    assert dcn.bw_bps == pytest.approx(CKPT_TRANSFER_BPS)
+    # the cross-pod fallback is strictly slower than the in-pod fabrics
+    ici = dm.interconnect_for("tpu-v5e")
+    assert dcn.bw_bps < ici.bw_bps and dcn.latency_s > ici.latency_s
+
+
+# ---------------------------------------------------------------------------
+# fabric pricing: kv_bytes_per_item x prefill_len over the interconnect,
+# exact vs the analytic formula (rtol 1e-12)
+# ---------------------------------------------------------------------------
+def test_fabric_prices_kv_handoff_analytically():
+    fab = fabric_for(PROF, kv_seq_budget=1024)
+    per_tok = PROF.kv_bytes_per_item / 1024
+    assert fab.kv_bytes_per_token == pytest.approx(per_tok, rel=1e-15)
+    for tokens in (1, 512, 1024, 4096):
+        want = fab.interconnect.transfer_s(per_tok * tokens)
+        assert fab.transfer_s(tokens) == pytest.approx(want, rel=1e-12)
+
+
+def test_fabric_charge_accounting_matches_analytic_sums():
+    trace = ragged_decode_trace(40, 0, rate_rps=50.0, prefill_mean=512)
+    rep = run_disagg_serving(PROF, seed=0, trace=trace, n_prefill=2,
+                             kv_seq_budget=1024)
+    _conserved(rep)
+    fab = fabric_for(PROF, kv_seq_budget=1024)
+    busy = sum(fab.transfer_s(r.prefill_tokens) for r in trace)
+    nbytes = sum(fab.kv_bytes_per_token * r.prefill_tokens for r in trace)
+    got = rep["fabric"]
+    assert got["transfers"] == len(trace)
+    assert got["busy_s"] == pytest.approx(busy, rel=1e-12)
+    assert got["bytes_moved"] == pytest.approx(nbytes, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# pool routing and placement
+# ---------------------------------------------------------------------------
+def test_pool_routes_to_least_loaded_member():
+    pool = PrefillPool(PROF, n_members=2, kv_seq_budget=1024, seed=0)
+    m0, done0 = pool.assign(0.0, 2048)
+    m1, done1 = pool.assign(0.0, 2048)
+    assert {m0, m1} == {0, 1}          # second prefill avoids the busy one
+    # third lands on whichever frees first
+    m2, _ = pool.assign(0.0, 512)
+    assert m2 == (m0 if done0 <= done1 else m1)
+    # prefill time scales with prompt length (per-token pricing)
+    long = pool.assign(100.0, 2048)[1] - 100.0
+    short = pool.assign(200.0, 256)[1] - 200.0
+    assert long > short
+
+
+def test_place_disagg_fleet_tail_convention():
+    from repro.serving.cluster import gpu_fleet
+    fleet = gpu_fleet(5)
+    pre, dec = place_disagg_fleet(fleet, 2)
+    assert [s.name for s in pre] == [s.name for s in fleet[-2:]]
+    assert [s.name for s in dec] == [s.name for s in fleet[:-2]]
+    with pytest.raises(ValueError):
+        place_disagg_fleet(fleet, 5)   # nothing left to decode
+
+
+# ---------------------------------------------------------------------------
+# conservation: normal exit, bounded queue, mid-transfer revocation
+# ---------------------------------------------------------------------------
+def test_disagg_conserves_requests():
+    trace = ragged_decode_trace(60, 0, rate_rps=40.0, prefill_mean=512)
+    rep = run_disagg_serving(PROF, seed=0, trace=trace, n_prefill=2,
+                             kv_seq_budget=1024)
+    _conserved(rep)
+    assert rep["completed"] == 60 and rep["rejected"] == 0
+    assert rep["in_transfer"] == 0     # folded into backlog, drained here
+
+
+def test_disagg_bounded_queue_rejects_and_conserves():
+    trace = ragged_decode_trace(80, 0, rate_rps=500.0, prefill_mean=512)
+    rep = run_disagg_serving(PROF, seed=0, trace=trace, n_prefill=1,
+                             kv_seq_budget=1024, max_slots=4, max_queue=4)
+    _conserved(rep)
+    assert rep["rejected"] > 0
+
+
+def test_mid_transfer_revocation_conserves_into_rejected():
+    # long prompts at a burst rate keep several prefills/transfers in
+    # flight on each member when the revocation lands
+    trace = ragged_decode_trace(60, 0, rate_rps=100.0, prefill_mean=2048)
+    base = run_disagg_serving(PROF, seed=0, trace=trace, n_prefill=2,
+                              kv_seq_budget=1024)
+    rep = run_disagg_serving(PROF, seed=0, trace=trace, n_prefill=2,
+                             kv_seq_budget=1024, revoke=(0.3, 1))
+    _conserved(rep)
+    assert rep["pool"]["dead"] == [1]
+    assert rep["rejected"] > 0
+    assert rep["completed"] + rep["rejected"] == base["completed"]
+    # the survivor keeps serving: the run still finishes every request
+    assert rep["backlog"] == 0
+
+
+def test_disagg_cluster_aggregates_conserve():
+    profs = [PROF, dm.llm_profile(get_config("gemma2-2b"), mode="decode",
+                                  kv_seq_budget=2048)]
+    rep = run_disagg_cluster(profs, seed=0, n_requests=40, rate_rps=40.0,
+                             prefill_mean=512, n_prefill=2,
+                             kv_seq_budget=1024)
+    assert rep["conserved"]
+    assert rep["submitted"] == sum(j["submitted"] for j in rep["jobs"])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: conservation + per-token pricing beats the monolithic
+# padded prefill for prompts far below the serving context
+# ---------------------------------------------------------------------------
+def test_chunked_prefill_conserves():
+    trace = ragged_decode_trace(60, 0, rate_rps=40.0, prefill_mean=512)
+    rep = run_token_serving(PROF, policy="continuous", seed=0, trace=trace,
+                            prefill_mode="chunked", chunk_tokens=256)
+    _conserved(rep)
+    assert rep["completed"] == 60
+
+
+def test_chunked_ttft_beats_padded_cotenant_on_short_prompts():
+    prof4k = dm.llm_profile(CFG, mode="decode", kv_seq_budget=4096)
+    trace = long_prefill_trace(60, 0, rate_rps=4.0, prefill_mean=2048)
+    slo = 0.9 * prof4k.prefill_ms / 1e3   # under the monolithic prefill
+    reps = {m: run_token_serving(prof4k, policy="continuous", seed=0,
+                                 trace=trace, prefill_mode=m,
+                                 chunk_tokens=512, ttft_slo_s=slo,
+                                 tpot_slo_s=0.05)
+            for m in ("chunked", "cotenant")}
+    for rep in reps.values():
+        _conserved(rep)
+    # co-tenant pays prefill_ms at the FULL kv budget for every prompt,
+    # chunked pays per actual token — mean prompts are half the context
+    assert reps["cotenant"]["ttft_attainment"] == 0.0
+    assert reps["chunked"]["ttft_attainment"] >= 0.9
+
+
+# ---------------------------------------------------------------------------
+# HybridScaler pool-ratio axis: demand-capped like `share`, grows under
+# prefill-wait pressure, releases idle rungs
+# ---------------------------------------------------------------------------
+def _scaler(**kw):
+    return HybridScaler(0.05, pool_ladder=(0.25, 0.5, 1.0), **kw)
+
+
+def test_pool_ratio_starts_top_and_releases_past_demand():
+    sc = _scaler()
+    assert sc.pool_ratio == 1.0        # boot: full pool, like share
+    sc.note_pool_demand(0.3)           # demand caps at the 0.5 rung
+    assert sc.observe_pool(0.0, ttft_slo_s=1.0)    # release one rung
+    assert sc.pool_ratio == 0.5
+    assert not sc.observe_pool(0.0, ttft_slo_s=1.0) or sc.pool_ratio == 0.25
+
+
+def test_pool_ratio_grows_under_prefill_wait_pressure():
+    sc = _scaler()
+    sc.note_pool_demand(0.2)           # trough: cap at the bottom rung
+    while sc.observe_pool(0.0, ttft_slo_s=1.0):
+        pass
+    low = sc.pool_ratio
+    assert low == 0.25
+    sc.note_pool_demand(0.9)           # demand returns: cap lifts
+    # no growth on pressure-free windows even with headroom...
+    assert not sc.observe_pool(0.1, ttft_slo_s=1.0)
+    # ...but p95 prefill+transfer wait over half the TTFT budget grows
+    assert sc.observe_pool(0.9, ttft_slo_s=1.0)
+    assert sc.pool_ratio > low
+
+
+def test_pool_ratio_growth_is_demand_capped():
+    sc = _scaler()
+    sc.note_pool_demand(0.3)           # cap at the 0.5 rung
+    while sc.observe_pool(0.0, ttft_slo_s=1.0):
+        pass
+    for _ in range(5):
+        sc.observe_pool(10.0, ttft_slo_s=1.0)
+    assert sc.pool_ratio <= 0.5        # pressure never overruns demand
+
+
+def test_pool_ratio_none_without_ladder():
+    sc = HybridScaler(0.05)
+    assert sc.pool_ratio is None
+
+
+# ---------------------------------------------------------------------------
+# pool-ratio axis end to end: the controller drives active members
+# ---------------------------------------------------------------------------
+def test_controller_pool_axis_keeps_attainment_and_conserves():
+    trace = long_prefill_trace(80, 0, rate_rps=12.0, prefill_mean=2048)
+    prof = dm.llm_profile(CFG, mode="decode", kv_seq_budget=2048)
+    rep = run_disagg_serving(prof, seed=0, trace=trace, n_prefill=3,
+                             kv_seq_budget=2048, max_slots=16,
+                             ttft_slo_s=1.2, tpot_slo_s=0.05,
+                             use_controller=True, pool_ladder=(1, 2, 3))
+    _conserved(rep)
+    assert rep["ttft_attainment"] >= 0.9
+    assert 1 <= rep["pool"]["active"] <= 3
+
+
+# ---------------------------------------------------------------------------
+# pool energy: idle floor over the makespan plus dynamic over busy time
+# ---------------------------------------------------------------------------
+def test_pool_energy_decomposes():
+    pool = PrefillPool(PROF, n_members=2, kv_seq_budget=1024, seed=0,
+                       device=dm.TPU_V5E)
+    pool.assign(0.0, 1024)
+    makespan = 10.0
+    e = pool.energy_j(makespan)
+    dev = dm.TPU_V5E
+    busy = sum(pool.busy_s)
+    lo = dev.idle_w * makespan          # one member used: idle floor only
+    #                                     on it, plus its dynamic draw
+    assert e == pytest.approx(lo + (dev.peak_w - dev.idle_w) * busy,
+                              rel=1e-9)
+    assert math.isfinite(e) and e > 0.0

@@ -363,3 +363,34 @@ def test_churn_serializer_round_trips_traffic_and_legacy_dicts():
     legacy = rp.serialize_churn(ChurnJob(job=PAPER_JOBS[2]))
     legacy.pop("traffic")
     assert rp.deserialize_churn(legacy).traffic is None
+
+
+# ---------------------------------------------------------------------------
+# carbon-aware power pricing: a time-varying $/J signal changes WHEN pack
+# consolidates — off-peak-cheap energy defers power-gating (idle silicon is
+# nearly free to keep warm), and the report prices the run
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_offpeak_cheap_signal_defers_pack_gating_vs_flat():
+    kw = dict(power_policy="pack", n_devices=3, horizon_s=60.0, seed=3)
+    flat = run_scenario_cluster("diurnal", power_price_fn=lambda t: 1e-7,
+                                **kw)["aggregate"]
+    # first half of the run at 2% of the peak price: packing's
+    # consolidation is deferred while energy is nearly free
+    cheap = run_scenario_cluster(
+        "diurnal",
+        power_price_fn=lambda t: 2e-9 if t < 30.0 else 1e-7,
+        **kw)["aggregate"]
+    # flat pricing gates like classic pack; the off-peak window keeps
+    # more devices powered for longer
+    assert cheap["device_powered_s"] > flat["device_powered_s"]
+    assert cheap["devices_powered"] >= flat["devices_powered"]
+    # both runs are priced: signal over powered intervals + dynamic joules
+    for a in (flat, cheap):
+        assert a["power_cost_usd"] > 0.0
+        assert a["cost_per_good_request"] > 0.0
+        assert a["conserved"]
+    # a neutral run (no price signal) reports None, not zero
+    plain = run_scenario_cluster("diurnal", **kw)["aggregate"]
+    assert plain["power_cost_usd"] is None
+    assert plain["cost_per_good_request"] is None
